@@ -1,0 +1,37 @@
+"""Kernel microbenches: Pallas (interpret-validated) entry points vs jnp.
+
+Interpret mode is a correctness harness, not a perf surface — the numbers
+here benchmark the jnp oracle path used on CPU and record problem sizes for
+the TPU kernels' VMEM plans (see kernels/*.py docstrings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rdf import pack3
+
+
+def main(emit=print):
+    rng = np.random.RandomState(0)
+    for m, q in ((1 << 16, 1 << 10), (1 << 20, 1 << 14)):
+        keys = jnp.asarray(np.sort(pack3(rng.randint(0, 1 << 20, m),
+                                         rng.randint(0, 50, m),
+                                         rng.randint(0, 1 << 20, m))))
+        qs = jnp.asarray(pack3(rng.randint(0, 1 << 20, q),
+                               rng.randint(0, 50, q),
+                               rng.randint(0, 1 << 20, q)))
+        f = jax.jit(lambda k, x: jnp.searchsorted(k, x))
+        jax.block_until_ready(f(keys, qs))
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(f(keys, qs))
+        dt = (time.perf_counter() - t0) / 10
+        emit(f"bench_kernels/searchsorted_m{m}_q{q},{dt*1e6:.0f},"
+             f"probes_per_s={q/dt:.3e}")
+
+
+if __name__ == "__main__":
+    main()

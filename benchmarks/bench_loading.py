@@ -1,0 +1,24 @@
+"""Paper Table 4: store bulk-load times (both indexes) vs dataset size."""
+from __future__ import annotations
+
+import time
+
+from repro.core import build_store
+from repro.data import lubm_like, sp2b_like
+
+
+def main(emit=print):
+    for bench, gen, scales in (("lubm", lubm_like, (1, 2, 4, 8)),
+                               ("sp2b", sp2b_like, (2000, 4000, 8000))):
+        for scale in scales:
+            tr, _, _ = gen(scale)
+            t0 = time.perf_counter()
+            store = build_store(tr, num_shards=8)
+            dt = time.perf_counter() - t0
+            emit(f"bench_loading/{bench}_x{scale},{dt*1e6:.0f},"
+                 f"triples={store.n_triples};triples_per_s={store.n_triples/dt:.0f};"
+                 f"bytes={store.storage_bytes()}")
+
+
+if __name__ == "__main__":
+    main()

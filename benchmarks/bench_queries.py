@@ -1,0 +1,74 @@
+"""Paper Table 5 / Figures 4-7: query execution, MAPSIN vs reduce-side.
+
+Reports, per (benchmark, query, scale): wall time of both engines on CPU and
+the modeled interconnect bytes for a 10-shard cluster (the paper's 10-node
+setup) — bytes are the scale-valid metric in this container; wall time is
+the laptop-scale sanity check (both engines run the same JAX substrate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import ExecConfig, build_store, execute_local, query_traffic
+from repro.core.bgp import query_traffic_actual
+from repro.data import lubm_like, sp2b_like
+
+CFG = ExecConfig(scan_cap=1 << 16, out_cap=1 << 13, probe_cap=128, row_cap=64)
+
+LUBM_QUERIES = ["Q1", "Q3", "Q4", "Q5", "Q6", "Q7", "Q8", "Q11", "Q13", "Q14"]
+SP2B_QUERIES = ["Q1", "Q2", "Q3a", "Q10"]
+
+
+def _time(fn, repeats=3):
+    fn()  # compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        import jax
+        jax.block_until_ready(out.table)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(scales=(1, 2, 4), emit=print):
+    rows = []
+    for bench, gen, queries, qnames in (
+            ("lubm", lubm_like, None, LUBM_QUERIES),
+            ("sp2b", sp2b_like, None, SP2B_QUERIES)):
+        for scale in scales:
+            arg = scale if bench == "lubm" else scale * 2000
+            tr, d, qs = gen(arg)
+            store = build_store(tr, 1)
+            for qname in qnames:
+                pats = qs[qname]
+                res = {}
+                for mode in ("mapsin", "reduce"):
+                    t = _time(lambda m=mode: execute_local(store, pats, m, CFG))
+                    res[mode] = t
+                stats: list = []
+                execute_local(store, pats, "mapsin", CFG, stats=stats)
+                mr = query_traffic_actual(stats, "mapsin_routed", 10, store.n_triples)
+                rd = query_traffic_actual(stats, "reduce", 10, store.n_triples)
+                speed = res["reduce"] / max(res["mapsin"], 1e-9)
+                movex = rd["total"] / max(mr["total"], 1)
+                emit(f"bench_queries/{bench}_{qname}_x{scale},"
+                     f"{res['mapsin']*1e6:.0f},"
+                     f"mapsin_us={res['mapsin']*1e6:.0f};reduce_us={res['reduce']*1e6:.0f};"
+                     f"speedup={speed:.2f};data_moved_ratio={movex:.1f};"
+                     f"net_mapsin={mr['network']};scan_mapsin={mr['scanned']};"
+                     f"net_reduce={rd['network']};scan_reduce={rd['scanned']};"
+                     f"triples={len(tr)}")
+                rows.append((bench, qname, scale, res, speed, movex))
+    return rows
+
+
+def main(emit=print):
+    run(emit=emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  bench_loading      — paper Table 4  (bulk load times)
+  bench_queries      — paper Table 5 / Figs 4,5,7 (MAPSIN vs reduce-side)
+  bench_multiway     — paper Fig 6 / §4.3 (star-join single-GET optimization)
+  bench_selectivity  — paper §5 analysis (win grows with selectivity)
+  bench_kernels      — kernel hot-spot microbenches
+
+Roofline terms come from the dry-run artifacts: see
+``python -m repro.launch.roofline`` (reads experiments/dryrun/*.json).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_loading, bench_multiway,
+                            bench_queries, bench_selectivity)
+    mods = {
+        "loading": bench_loading,
+        "queries": bench_queries,
+        "multiway": bench_multiway,
+        "selectivity": bench_selectivity,
+        "kernels": bench_kernels,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        mod.main(emit=print)
+
+
+if __name__ == "__main__":
+    main()

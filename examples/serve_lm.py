@@ -1,0 +1,15 @@
+"""Serve a small model: batched prefill + incremental decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-8b]
+"""
+import argparse
+
+from repro.launch import serve  # reuse the CLI implementation
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-8b")
+args, rest = ap.parse_known_args()
+sys.argv = ["serve", "--arch", args.arch, "--smoke", "--tokens", "8"] + rest
+from repro.launch.serve import main
+main()

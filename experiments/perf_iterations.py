@@ -1,0 +1,110 @@
+"""§Perf hillclimb driver: three cells, hypothesis -> change -> re-lower ->
+measure (analytic terms + compiled-HLO collective inventory + residency).
+
+Run:  PYTHONPATH=src python experiments/perf_iterations.py
+Artifacts: experiments/dryrun/*_<tag>.json + experiments/perf_results.json
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS=512 devices)
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.costmodel import cost_cell  # noqa: E402
+from repro.common import dump_json  # noqa: E402
+
+SINGLE = {"data": 16, "model": 16}
+RESULTS = []
+
+
+def record(name, cell, base_terms, new_terms, base_rep, new_rep, hypothesis,
+           confirmed, note):
+    RESULTS.append({
+        "iteration": name, "cell": cell, "hypothesis": hypothesis,
+        "before": base_terms, "after": new_terms,
+        "hlo_collective_before": base_rep["collective_bytes"],
+        "hlo_collective_after": new_rep["collective_bytes"],
+        "resid_before_gib": base_rep["analytic_memory"]["total"] / 2**30,
+        "resid_after_gib": new_rep["analytic_memory"]["total"] / 2**30,
+        "confirmed": confirmed, "note": note,
+    })
+    print(f"[perf] {name}: dominant {base_terms['dominant']}"
+          f" {base_terms['step_s']:.3e}s -> {new_terms['dominant']}"
+          f" {new_terms['step_s']:.3e}s | roofline_frac"
+          f" {base_terms['roofline_fraction']:.3f} ->"
+          f" {new_terms['roofline_fraction']:.3f} | {confirmed}")
+
+
+def terms_of(arch, shape_name, mesh_shape, micro, **kw):
+    cfg = get_config(arch)
+    c = cost_cell(cfg, SHAPES[shape_name], mesh_shape, micro, **kw)
+    t = c.terms(256)
+    t["coll_bytes"] = c.coll_bytes
+    t["hbm_bytes"] = c.hbm_bytes
+    return t
+
+
+def main():
+    # ---------------- Iteration A: xlstm-125m train_4k ----------------
+    # Worst roofline fraction (0.05). Hypothesis: a 125M model on a 16x16
+    # mesh is over-tensor-parallelized — 3 TP combines/layer cost more链
+    # bytes than the whole FSDP stream. Napkin: TP coll ~ 3L*T_act*(tp-1)*3
+    # = 3*12*4096*2B*1M tokens... >> params (0.25GB). Change: dp_heavy rules
+    # (batch over data x model, zero TP). Expect collective -> ~FSDP-only,
+    # compute-bound cell.
+    base = dryrun.run_cell("xlstm-125m", "train_4k", False)
+    new = dryrun.run_cell("xlstm-125m", "train_4k", False, tag="dp_heavy",
+                          rules_overrides={"dp_heavy": True})
+    bt = terms_of("xlstm-125m", "train_4k", SINGLE, 16)
+    nt = terms_of("xlstm-125m", "train_4k", {"data": 256, "model": 1}, 1)
+    record("A.dp_heavy", "xlstm-125m/train_4k", bt, nt,
+           base, new,
+           "125M model over-TP'd: 3 TP combines/layer dominate; remap model "
+           "axis to data parallelism",
+           "confirmed" if nt["step_s"] < 0.5 * bt["step_s"] else "refuted",
+           "batch 256 over all 256 chips; params FSDP over data only")
+
+    # ---------------- Iteration B: dbrx-132b train_4k -----------------
+    # Most collective-bound (25.2s vs 7.6s compute). Hypothesis: 16 experts
+    # don't divide 256 chips, so expert weights (97% of params) sat on the
+    # model axis ONLY and their d_model dim was FSDP-gathered over data every
+    # microbatch: 264GB*3passes*16micro*15 links. Change: experts over the
+    # 16-way DATA axis + d_ff TP over model -> expert weights fully sharded,
+    # zero expert FSDP gathers; tokens route via a2a (the MAPSIN economy).
+    base = dryrun.run_cell("dbrx-132b", "train_4k", False)
+    new = dryrun.run_cell("dbrx-132b", "train_4k", False, tag="ep_data")
+    bt = terms_of("dbrx-132b", "train_4k", SINGLE, 16, assume_ep=False)
+    nt = terms_of("dbrx-132b", "train_4k", SINGLE, 16, assume_ep=True)
+    record("B.ep_data", "dbrx-132b/train_4k", bt, nt, base, new,
+           "expert-weight FSDP gathers dominate; full-shard experts over "
+           "(data x model), ship routed tokens instead of weights",
+           "confirmed" if nt["collective_s"] < 0.5 * bt["collective_s"] else "refuted",
+           "experts->data axis, d_ff->model (rules change is now the default "
+           "— the tagged artifact equals the new baseline)")
+
+    # ---------------- Iteration C: qwen3-8b decode_32k ----------------
+    # Memory-bound serve cell of the arch that exercises the paper's
+    # technique (mapsin vocab-sharded embedding). Hypothesis: each of the 16
+    # data replicas streams the full TP slice of the MLP (2/3 of weights)
+    # every step; sharding d_ff over data x model streams it once.
+    # Expect memory term ~ /2.3; tiny decode activations make the extra
+    # all-reduce negligible.
+    base = dryrun.run_cell("qwen3-8b", "decode_32k", False)
+    new = dryrun.run_cell("qwen3-8b", "decode_32k", False, tag="wide_mlp",
+                          rules_overrides={"wide_mlp_serve": True})
+    bt = terms_of("qwen3-8b", "decode_32k", SINGLE, 1)
+    nt = terms_of("qwen3-8b", "decode_32k", SINGLE, 1, wide_mlp=True)
+    record("C.wide_mlp", "qwen3-8b/decode_32k", bt, nt, base, new,
+           "decode streams MLP weights once per data replica; wide-TP the "
+           "d_ff dim over all 256 chips",
+           "confirmed" if nt["memory_s"] < 0.6 * bt["memory_s"] else "refuted",
+           "weights resident/chip also drop 16x for the MLP slice")
+
+    dump_json(RESULTS, os.path.join(os.path.dirname(__file__),
+                                    "perf_results.json"))
+    print(f"[perf] wrote {len(RESULTS)} iterations")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — MAPSIN cascading map-side joins on TPU/JAX + multi-arch LM framework."""
+import jax
+
+# The join engine's composite triple keys are 63-bit (3 x 21-bit terms in one
+# sorted int64 word — see core/rdf.py). All model code pins its dtypes
+# explicitly (bf16/f32/int32), so enabling x64 only affects the key arrays.
+jax.config.update("jax_enable_x64", True)

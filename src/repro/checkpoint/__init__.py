@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import AsyncCheckpointer, latest, load, save  # noqa: F401

@@ -1,0 +1,143 @@
+"""Sharded, elastic, atomic checkpointing.
+
+Format: one directory per step containing `manifest.json` (tree structure,
+shapes, dtypes, step) + `arrays.npz` (leaves keyed by '/'-joined path).
+Arrays are saved with *global* shapes, so restore is mesh-shape-agnostic:
+`load` re-places every leaf with the *target* mesh's NamedSharding — this is
+the elastic-scaling path (train on N chips, resume on M chips).
+
+Writes are atomic (tmp dir + rename) and optionally asynchronous (snapshot
+to host synchronously, file I/O on a writer thread) so the train loop never
+blocks on disk. Fault tolerance = deterministic data keyed by step + these
+checkpoints: kill at any point, restart, bit-exact continuation (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.common import tree_map_with_path, tree_paths
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    """npz can't store ml_dtypes (bf16): persist as a uint16 view + marker."""
+    out = {}
+    for path, leaf in tree_paths(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            out["/".join(path) + "::bf16"] = arr.view(np.uint16)
+        else:
+            out["/".join(path)] = arr
+    return out
+
+
+def save(workdir: str, step: int, trees: dict[str, Any],
+         keep: int = 3) -> str:
+    """trees: e.g. {"params": ..., "opt_state": ...}. Returns ckpt path."""
+    os.makedirs(workdir, exist_ok=True)
+    final = os.path.join(workdir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays: dict[str, np.ndarray] = {}
+    spec: dict[str, Any] = {"step": step, "trees": {}}
+    for name, tree in trees.items():
+        flat = _flatten(tree)
+        for k, v in flat.items():
+            arrays[f"{name}/{k}"] = v
+        spec["trees"][name] = sorted(flat)
+    np.savez(os.path.join(tmp, ARRAYS), **arrays)
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(spec, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(workdir, keep)
+    return final
+
+
+def _gc(workdir: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(workdir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(workdir, d), ignore_errors=True)
+
+
+def latest(workdir: str) -> str | None:
+    if not os.path.isdir(workdir):
+        return None
+    ckpts = sorted(d for d in os.listdir(workdir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(workdir, ckpts[-1]) if ckpts else None
+
+
+def load(path: str, templates: dict[str, Any],
+         shardings: dict[str, Any] | None = None) -> tuple[int, dict[str, Any]]:
+    """templates: same-structure trees (arrays or ShapeDtypeStructs).
+    shardings: optional same-structure trees of NamedSharding for re-placement
+    on a (possibly different) mesh — the elastic-restore path."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        spec = json.load(f)
+    data = np.load(os.path.join(path, ARRAYS))
+    out: dict[str, Any] = {}
+    for name, template in templates.items():
+        def fill(p, leaf):
+            key = f"{name}/" + "/".join(p)
+            if key + "::bf16" in data:
+                import ml_dtypes
+                arr = data[key + "::bf16"].view(ml_dtypes.bfloat16)
+            else:
+                arr = data[key]
+            assert tuple(arr.shape) == tuple(leaf.shape), \
+                f"{name}/{p}: ckpt {arr.shape} != template {leaf.shape}"
+            if shardings is not None:
+                return jax.device_put(arr, _lookup(shardings[name], p))
+            return jax.device_put(arr.astype(leaf.dtype))
+        out[name] = tree_map_with_path(fill, template)
+    return spec["step"], out
+
+
+def _lookup(tree: Any, path: tuple):
+    for p in path:
+        if isinstance(tree, dict):
+            tree = tree[p]
+        else:
+            tree = tree[int(p)]
+    return tree
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously (device -> host copy), write on a thread."""
+
+    def __init__(self, workdir: str, keep: int = 3):
+        self.workdir = workdir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def save(self, step: int, trees: dict[str, Any]) -> None:
+        self.wait()
+        host = {name: jax.tree.map(np.asarray, tree)
+                for name, tree in trees.items()}
+
+        def _write():
+            self.last_path = save(self.workdir, step, host, self.keep)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,11 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, get_config, list_archs,
+    reduce_for_smoke, runnable_shapes,
+)
+
+# Assigned architectures (one module per arch) + the paper's own workload.
+from repro.configs import (  # noqa: F401
+    deepseek_7b, yi_6b, qwen3_8b, yi_34b, deepseek_v3_671b, dbrx_132b,
+    pixtral_12b, musicgen_large, xlstm_125m, recurrentgemma_9b, mapsin_rdf,
+)

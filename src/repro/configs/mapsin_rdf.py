@@ -1,0 +1,21 @@
+"""The paper's own workload config: RDF triple store + MAPSIN join engine.
+
+Not an LM architecture — this config parameterizes the core/ join engine
+(store capacity, shard count, probe capacities) for the benchmark harness
+and examples. Registered so `--arch mapsin-rdf` selects the paper workload.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MapsinConfig:
+    name: str = "mapsin-rdf"
+    num_shards: int = 8           # logical store shards (HBase regions)
+    probe_capacity: int = 4       # matches fetched per probe key (per pattern)
+    result_capacity: int = 1 << 16  # solution-multiset capacity per shard
+    sort_impl: str = "jnp"        # jnp | pallas_interpret
+    lookup_impl: str = "jnp"
+
+
+def config() -> MapsinConfig:
+    return MapsinConfig()

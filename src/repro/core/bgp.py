@@ -1,0 +1,333 @@
+"""BGP planner + executor: variable-counting reorder, star-join grouping,
+MAPSIN vs reduce-side execution, local or sharded, with traffic accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import distributed as dist
+from repro.core import mapsin as ms
+from repro.core import reduce_side as rs
+from repro.core.plan import make_plan
+from repro.core.rdf import Pattern
+from repro.core.triple_store import TripleStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    scan_cap: int = 1 << 14      # first-pattern scan capacity (per shard)
+    probe_cap: int = 8           # matches per GET (per mapping)
+    row_cap: int = 32            # row width for multiway single-GET
+    out_cap: int = 1 << 14       # solution multiset capacity (per shard)
+    bucket_cap: int = 1 << 12    # reduce-side shuffle bucket capacity
+    impl: str = "jnp"            # jnp | pallas_interpret
+    reorder: bool = True
+    multiway: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    kind: str                    # scan | join | multiway
+    patterns: tuple[Pattern, ...]
+
+
+def pattern_cardinality(store: TripleStore, pat: Pattern) -> int:
+    """Exact result count for a pattern's constant key prefix — one binary
+    search pair against the store index. This is the statistics-based
+    selectivity the paper's §7 lists as future work; the sorted composite-key
+    store makes it free."""
+    plan = make_plan(pat, ())
+    if not plan.prefix:
+        return store.n_triples
+    from repro.core.plan import probe_ranges
+    empty = jnp.zeros((1, 0), jnp.int32)
+    lo, hi = probe_ranges(plan, empty)
+    keys = store.flat_keys(plan.index)
+    return int(jnp.searchsorted(keys, hi[0]) - jnp.searchsorted(keys, lo[0]))
+
+
+def order_patterns(patterns: Sequence[Pattern], reorder: bool = True,
+                   store: TripleStore | None = None):
+    """Variable-counting heuristic (paper §4.2): most selective first, then
+    greedily prefer patterns connected to the bound domain. With a store,
+    ties break on measured prefix-range cardinality (beyond-paper)."""
+    pats = list(patterns)
+    if not reorder:
+        return pats
+
+    def rank(p: Pattern):
+        base = p.selectivity_rank()
+        if store is not None:
+            return base + (pattern_cardinality(store, p),)
+        return base
+
+    pats_sorted = sorted(pats, key=rank)
+    out = [pats_sorted.pop(0)]
+    domain = set(out[0].variables)
+    while pats_sorted:
+        connected = [p for p in pats_sorted if set(p.variables) & domain]
+        nxt = min(connected or pats_sorted, key=rank)
+        pats_sorted.remove(nxt)
+        out.append(nxt)
+        domain |= set(nxt.variables)
+    return out
+
+
+def plan_steps(patterns: Sequence[Pattern], cfg: ExecConfig,
+               store: TripleStore | None = None) -> list[Step]:
+    ordered = order_patterns(patterns, cfg.reorder, store)
+    steps: list[Step] = [Step("scan", (ordered[0],))]
+    domain: list[str] = list(ordered[0].variables)
+    i = 1
+    while i < len(ordered):
+        group = [ordered[i]]
+        if cfg.multiway:
+            plan_i = make_plan(ordered[i], domain)
+            new_vars = set(plan_i.out_var_names)
+            j = i + 1
+            while j < len(ordered) and len(plan_i.prefix) >= 1:
+                cand = make_plan(ordered[j], domain)
+                same_row = (cand.index == plan_i.index and
+                            len(cand.prefix) >= 1 and
+                            cand.prefix[0] == plan_i.prefix[0])
+                fresh = not (set(cand.out_var_names) & new_vars)
+                uses_new = bool(set(ordered[j].variables) & new_vars)
+                if not (same_row and fresh and not uses_new):
+                    break
+                group.append(ordered[j])
+                new_vars |= set(cand.out_var_names)
+                j += 1
+        if len(group) > 1:
+            steps.append(Step("multiway", tuple(group)))
+        else:
+            steps.append(Step("join", (group[0],)))
+        for g in group:
+            for v in g.variables:
+                if v not in domain:
+                    domain.append(v)
+        i += len(group)
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (bytes shipped by the collectives; static formulas)
+# ---------------------------------------------------------------------------
+
+
+def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
+                       n_vars_before: int) -> int:
+    """Global bytes crossing the interconnect for one step (padding included).
+
+    Modes:
+      mapsin         — the implemented broadcast-GET: probe keys are
+                       all-gathered (correct for arbitrarily fat rows), match
+                       counts all-gathered, matches psum_scattered home.
+                       Pays O(S) on the key/count legs — fine for pods,
+                       quantified so §Perf can show the routed win.
+      mapsin_routed  — the production point-to-point GET (DESIGN.md §2):
+                       each probe travels to its owner shard once (a2a) and
+                       its matches travel back once. O(B) — the paper's RPC.
+      reduce         — shuffle BOTH relations (repartition join).
+    """
+    s, b = num_shards, cfg.out_cap
+    if s == 1 or step.kind == "scan":
+        return 0
+    cap = cfg.row_cap if step.kind == "multiway" else cfg.probe_cap
+    if mode == "mapsin":
+        keys = s * b * (8 + 8 + 24) * (s - 1)          # all_gather lo/hi/filters
+        counts = s * (s * b) * 4 * (s - 1)             # all_gather counts
+        matches = s * (s * b) * cap * 8                # psum_scatter ring pass
+        return keys + counts + matches
+    if mode == "mapsin_routed":
+        keys = s * b * (8 + 8 + 24 + 4)                # a2a probe records
+        matches = s * b * cap * 8                      # a2a matches home
+        return keys + matches
+    # reduce-side: shuffle Omega and the scanned relation in full
+    nv_left = n_vars_before
+    per_rel = s * s * cfg.bucket_cap * 4               # rows x int32 cols
+    rounds = len(step.patterns)
+    return rounds * (per_rel * (nv_left + 3) + per_rel)  # + validity bytes
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+def execute_local(store: TripleStore, patterns: Sequence[Pattern],
+                  mode: str = "mapsin", cfg: ExecConfig = ExecConfig(),
+                  stats: list | None = None):
+    """Single-shard execution (functional reference; also the oracle's peer).
+
+    When `stats` is a list, appends per-step dicts with ACTUAL row counts
+    (bindings in/out, pattern relation size) — feeds the measured traffic
+    model in query_traffic_actual (the paper's network metric)."""
+    steps = plan_steps(patterns, cfg, store)
+    keys_of = lambda pat, dom: store.flat_keys(make_plan(pat, dom).index)
+    bnd = ms.scan_pattern(steps[0].patterns[0],
+                          keys_of(steps[0].patterns[0], ()), cfg.out_cap,
+                          cfg.impl)
+    if stats is not None:
+        stats.append({"kind": "scan", "n_in": 0, "n_out": int(bnd.count()),
+                      "nv": len(bnd.vars), "relation": int(bnd.count()),
+                      "n_patterns": 1})
+    for st in steps[1:]:
+        n_in, nv_in = (int(bnd.count()), len(bnd.vars)) if stats is not None else (0, 0)
+        if mode == "mapsin":
+            if st.kind == "multiway":
+                keys = keys_of(st.patterns[0], bnd.vars)
+                bnd = ms.multiway_step(bnd, st.patterns, keys, cfg.row_cap,
+                                       cfg.out_cap, cfg.impl)
+            else:
+                keys = keys_of(st.patterns[0], bnd.vars)
+                bnd = ms.mapsin_step(bnd, st.patterns[0], keys, cfg.probe_cap,
+                                     cfg.out_cap, cfg.impl)
+        else:
+            for pat in st.patterns:  # reduce-side has no multiway shortcut here
+                # the relation is scanned fresh (empty domain -> scan index)
+                keys = keys_of(pat, ())
+                bnd = rs.local_reduce_step(bnd, pat, keys, cfg.scan_cap,
+                                           cfg.probe_cap, cfg.out_cap, cfg.impl)
+        if stats is not None:
+            rel = 0
+            for pat in st.patterns:
+                r = ms.scan_pattern(pat, keys_of(pat, ()), cfg.scan_cap, cfg.impl)
+                rel += int(r.count())
+            stats.append({"kind": st.kind, "n_in": n_in,
+                          "n_out": int(bnd.count()), "nv": nv_in,
+                          "relation": rel, "n_patterns": len(st.patterns)})
+    return bnd
+
+
+def query_traffic_actual(stats: list, mode: str, num_shards: int,
+                         n_triples: int = 0) -> dict:
+    """Data-movement bytes from ACTUAL row counts (vs the static-capacity
+    model in query_traffic). Two components, mirroring the paper's setting:
+
+    network — what crosses the interconnect per join step:
+      mapsin_routed — each input mapping's probe record travels once
+                      (44 B: lo/hi keys + filters + origin) and each match
+                      comes back once (12 B triple);
+      mapsin        — broadcast-GET: probe records x (S-1), matches once;
+      reduce        — Omega + the (already filtered) relation are shuffled.
+
+    scanned — storage bytes read to produce the step's input:
+      reduce        — HDFS has NO index: every pattern forces a full pass
+                      over the dataset in the map phase (the dominant cost
+                      the paper measures for selective queries);
+      mapsin        — index GETs: ~log2(N) binary-search touches per probe
+                      plus the matched entries only.
+    """
+    import math
+    s = num_shards
+    net = 0
+    scanned = 0
+    logn = max(math.ceil(math.log2(max(n_triples, 2))), 1)
+    for st in stats:
+        rounds = 1 if st["kind"] == "multiway" else st["n_patterns"]
+        if st["kind"] == "scan":
+            if mode == "reduce":
+                scanned += n_triples * 8          # full pass, no index
+            else:
+                scanned += st["n_out"] * 8 + logn * 8  # index range scan
+            continue
+        rec, match_b = 44, 12
+        if mode == "mapsin_routed":
+            if s > 1:
+                net += st["n_in"] * rec * rounds + st["n_out"] * match_b
+            scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
+        elif mode == "mapsin":
+            if s > 1:
+                net += (st["n_in"] * rec * (s - 1) * rounds
+                        + st["n_out"] * match_b)
+            scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
+        else:  # reduce-side
+            row_l = st["nv"] * 4 + 4
+            if s > 1:
+                net += st["n_patterns"] * (st["n_in"] * row_l
+                                           + st["relation"] * 16)
+            scanned += st["n_patterns"] * n_triples * 8
+    return {"network": net, "scanned": scanned, "total": net + scanned}
+
+
+def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str):
+    def fn(keys_spo, keys_ops):
+        keys_spo = keys_spo.reshape(-1)
+        keys_ops = keys_ops.reshape(-1)
+        keys_of = lambda pat, dom: (keys_spo if make_plan(pat, dom).index == 0
+                                    else keys_ops)
+        bnd = ms.scan_pattern(steps[0].patterns[0],
+                              keys_of(steps[0].patterns[0], ()), cfg.out_cap,
+                              cfg.impl)
+        for st in steps[1:]:
+            if mode == "mapsin":
+                if st.kind == "multiway":
+                    keys = keys_of(st.patterns[0], bnd.vars)
+                    bnd = dist.dist_multiway_step(bnd, st.patterns, keys,
+                                                  cfg.row_cap, cfg.out_cap,
+                                                  axis, cfg.impl)
+                else:
+                    keys = keys_of(st.patterns[0], bnd.vars)
+                    bnd = dist.dist_mapsin_step(bnd, st.patterns[0], keys,
+                                                cfg.probe_cap, cfg.out_cap,
+                                                axis, cfg.impl)
+            else:
+                for pat in st.patterns:
+                    keys = keys_of(pat, ())  # relation scan: empty domain
+                    bnd = rs.dist_reduce_step(bnd, pat, keys, cfg.scan_cap,
+                                              cfg.bucket_cap, cfg.probe_cap,
+                                              cfg.out_cap, axis, cfg.impl)
+        return bnd.table, bnd.valid, bnd.overflow[None]
+    return fn
+
+
+def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
+                    mesh, mode: str = "mapsin",
+                    cfg: ExecConfig = ExecConfig(), axis: str = "data"):
+    """Distributed execution under shard_map on `mesh` (store sharded on
+    `axis`). Returns (table (S*cap, nv), valid, overflow (S,), vars)."""
+    steps = plan_steps(patterns, cfg, store)
+    # derive final var order (static)
+    domain: list[str] = []
+    for st in steps:
+        for pat in st.patterns:
+            plan = make_plan(pat, domain)
+            domain.extend(plan.out_var_names)
+    fn = _sharded_fn(steps, mode, cfg, axis)
+    sharded = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=(P(axis, None), P(axis), P(axis)),
+        check_rep=False)
+    table, valid, overflow = jax.jit(sharded)(store.keys_spo, store.keys_ops)
+    return table, valid, overflow, tuple(domain)
+
+
+def query_traffic(patterns: Sequence[Pattern], mode: str, cfg: ExecConfig,
+                  num_shards: int) -> int:
+    """Total modeled interconnect bytes for a query (paper's network metric)."""
+    steps = plan_steps(patterns, cfg)
+    domain: list[str] = []
+    total = 0
+    for st in steps:
+        total += step_traffic_bytes(st, mode, cfg, num_shards, len(domain))
+        for pat in st.patterns:
+            plan = make_plan(pat, domain)
+            domain.extend(plan.out_var_names)
+    return total
+
+
+def rows_set(table, valid, n_vars: int) -> set[tuple[int, ...]]:
+    """Materialize valid rows as a python set (host-side, for comparisons)."""
+    t = np.asarray(table)[np.asarray(valid)]
+    if n_vars == 0:
+        return set([()] if len(t) else [])
+    return set(map(tuple, t[:, :n_vars].tolist()))

@@ -1,0 +1,45 @@
+"""Brute-force BGP oracle (pure python/numpy) — ground truth for tests."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.rdf import Pattern, is_var
+
+
+def match_pattern(triples: np.ndarray, pattern: Pattern,
+                  binding: dict[str, int]):
+    """Yield extended bindings for one pattern given a partial binding."""
+    for s, p, o in triples:
+        b = dict(binding)
+        ok = True
+        for term, val in ((pattern.s, int(s)), (pattern.p, int(p)),
+                          (pattern.o, int(o))):
+            if is_var(term):
+                if term in b and b[term] != val:
+                    ok = False
+                    break
+                b[term] = val
+            elif int(term) != val:
+                ok = False
+                break
+        if ok:
+            yield b
+
+
+def execute_oracle(triples: np.ndarray, patterns: Sequence[Pattern],
+                   var_order: Sequence[str] | None = None):
+    """Full nested-loop evaluation; returns (set of rows, var order)."""
+    triples = np.unique(triples, axis=0)
+    bindings: list[dict[str, int]] = [{}]
+    for pat in patterns:
+        bindings = [b2 for b in bindings for b2 in match_pattern(triples, pat, b)]
+    if var_order is None:
+        var_order = []
+        for pat in patterns:
+            for v in pat.variables:
+                if v not in var_order:
+                    var_order.append(v)
+    rows = set(tuple(b[v] for v in var_order) for b in bindings)
+    return rows, tuple(var_order)

@@ -1,0 +1,90 @@
+"""Reduce-side (repartition) join baseline — the paper's comparison point.
+
+Per iteration: the pattern's full relation is scanned (map phase), then BOTH
+the accumulated solution multiset and the relation are hash-partitioned by
+join key across all shards (shuffle phase — full-relation network traffic),
+then joined locally (reduce phase: sort-merge). This mirrors Pig's
+reduce-side join that PigSPARQL uses in the paper's evaluation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import repartition
+from repro.core.mapsin import Bindings, compact, scan_pattern
+from repro.core.plan import make_plan
+
+
+def sort_merge_join(lt, lv, rt, rv, lkey_col: int, rkey_col: int,
+                    extra_eq: list[tuple[int, int]], r_out_cols: list[int],
+                    probe_cap: int, out_cap: int):
+    """Local equi-join of two fixed-capacity row tables on one key column.
+
+    Returns (table, valid, dropped) with columns = left cols + r_out_cols.
+    """
+    rkey = jnp.where(rv, rt[:, rkey_col], jnp.int32(2**31 - 1))
+    order = jnp.argsort(rkey)
+    rks, rts, rvs = rkey[order], rt[order], rv[order]
+    lkey = lt[:, lkey_col]
+    lo = jnp.searchsorted(rks, lkey, side="left")
+    hi = jnp.searchsorted(rks, lkey, side="right")
+    idx = lo[:, None] + jnp.arange(probe_cap)[None]
+    m = rks.shape[0]
+    take = jnp.minimum(idx, m - 1)
+    match = (idx < hi[:, None]) & lv[:, None] & rvs[take]
+    missed = jnp.maximum(hi - lo - probe_cap, 0)
+    rrows = rts[take]                                    # (L, cap, nvr)
+    for la, ra in extra_eq:
+        match = match & (lt[:, la][:, None] == rrows[..., ra])
+    lrows = jnp.broadcast_to(lt[:, None, :], (lt.shape[0], probe_cap, lt.shape[1]))
+    cols = [lrows] + [rrows[..., c][..., None] for c in r_out_cols]
+    rows = jnp.concatenate(cols, -1).reshape(lt.shape[0] * probe_cap, -1)
+    table, vmask, dropped = compact(rows, match.reshape(-1), out_cap)
+    dropped = dropped + jnp.sum(jnp.where(lv, missed, 0)).astype(jnp.int32)
+    return table, vmask, dropped
+
+
+def dist_reduce_step(bnd: Bindings, pattern, local_keys, scan_cap: int,
+                     bucket_cap: int, probe_cap: int, out_cap: int,
+                     axis: str, impl: str = "jnp") -> Bindings:
+    """One reduce-side join iteration (shuffle both sides, join in 'reduce')."""
+    plan = make_plan(pattern, bnd.vars)
+    rel = scan_pattern(pattern, local_keys, scan_cap, impl)
+    shared = [v for v in plan.pattern.variables if v in bnd.vars]
+    assert shared, "reduce-side join requires a shared variable"
+    jvar = shared[0]
+    lcol = bnd.vars.index(jvar)
+    rcol = rel.vars.index(jvar)
+    extra_eq = [(bnd.vars.index(v), rel.vars.index(v)) for v in shared[1:]]
+    r_out = [i for i, v in enumerate(rel.vars) if v not in bnd.vars]
+    # ---- shuffle phase: both relations cross the network ----
+    lt, lv, dl = repartition(bnd.table, bnd.valid, bnd.table[:, lcol],
+                             bucket_cap, axis)
+    rt, rv, dr = repartition(rel.table, rel.valid, rel.table[:, rcol],
+                             bucket_cap, axis)
+    # ---- reduce phase: local sort-merge join ----
+    table, vmask, dropped = sort_merge_join(
+        lt, lv, rt, rv, lcol, rcol, extra_eq, r_out, probe_cap, out_cap)
+    new_vars = bnd.vars + tuple(v for v in rel.vars if v not in bnd.vars)
+    overflow = (bnd.overflow + rel.overflow + dl + dr + dropped)
+    return Bindings(new_vars, table, vmask, overflow)
+
+
+def local_reduce_step(bnd: Bindings, pattern, keys, scan_cap: int,
+                      probe_cap: int, out_cap: int, impl: str = "jnp") -> Bindings:
+    """Single-shard reduce-side join (no shuffle — functional baseline)."""
+    plan = make_plan(pattern, bnd.vars)
+    rel = scan_pattern(pattern, keys, scan_cap, impl)
+    shared = [v for v in plan.pattern.variables if v in bnd.vars]
+    assert shared, "reduce-side join requires a shared variable"
+    jvar = shared[0]
+    lcol = bnd.vars.index(jvar)
+    rcol = rel.vars.index(jvar)
+    extra_eq = [(bnd.vars.index(v), rel.vars.index(v)) for v in shared[1:]]
+    r_out = [i for i, v in enumerate(rel.vars) if v not in bnd.vars]
+    table, vmask, dropped = sort_merge_join(
+        bnd.table, bnd.valid, rel.table, rel.valid, lcol, rcol, extra_eq,
+        r_out, probe_cap, out_cap)
+    new_vars = bnd.vars + tuple(v for v in rel.vars if v not in bnd.vars)
+    return Bindings(new_vars, table, vmask, bnd.overflow + rel.overflow + dropped)

@@ -1,0 +1,93 @@
+"""Sharded sorted triple store — the HBase analogue (DESIGN.md §2).
+
+Two indexes mirror the paper's two-table schema:
+  T_spo — composite keys sorted by (s, p, o)   [row key = subject]
+  T_ops — composite keys sorted by (o, p, s)   [row key = object]
+
+Each index is range-partitioned into `num_shards` equal slices by sampled
+quantiles of the *full composite key* (region boundaries). A fat row (the
+paper's `rdf:type` problem) therefore legally spans shards — probes that
+cover it fan out to every intersecting shard, which is exactly the paper's
+compound-rowkey fix generalized: no single machine ever owns a whole class.
+
+Shards are padded to equal length with INF keys so every per-shard array is
+statically shaped (TPU requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import ceil_div
+from repro.core.rdf import INF_KEY, pack3
+
+SPO, OPS = 0, 1  # index ids (paper Table 3 chooses between them per pattern)
+
+
+@dataclasses.dataclass
+class TripleStore:
+    # (num_shards, shard_cap) int64, sorted ascending within & across shards
+    keys_spo: jnp.ndarray
+    keys_ops: jnp.ndarray
+    # (num_shards + 1,) int64 region boundaries (splitters[0] = -1)
+    splits_spo: jnp.ndarray
+    splits_ops: jnp.ndarray
+    counts_spo: jnp.ndarray  # (num_shards,) valid entries per shard
+    counts_ops: jnp.ndarray
+    n_triples: int
+
+    @property
+    def num_shards(self) -> int:
+        return self.keys_spo.shape[0]
+
+    @property
+    def shard_cap(self) -> int:
+        return self.keys_spo.shape[1]
+
+    def keys(self, index: int) -> jnp.ndarray:
+        return self.keys_spo if index == SPO else self.keys_ops
+
+    def flat_keys(self, index: int) -> jnp.ndarray:
+        return self.keys(index).reshape(-1)
+
+    def storage_bytes(self) -> int:
+        return int(self.keys_spo.size + self.keys_ops.size) * 8
+
+
+def _shard_sorted(keys: np.ndarray, num_shards: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split a sorted key array into equal shards; return (padded, splits, counts)."""
+    n = len(keys)
+    cap = max(ceil_div(n, num_shards), 1)
+    padded = np.full((num_shards, cap), INF_KEY, np.int64)
+    splits = np.empty(num_shards + 1, np.int64)
+    counts = np.zeros(num_shards, np.int64)
+    splits[0] = np.int64(-1)
+    for k in range(num_shards):
+        lo, hi = k * cap, min((k + 1) * cap, n)
+        cnt = max(hi - lo, 0)
+        if cnt > 0:
+            padded[k, :cnt] = keys[lo:hi]
+        counts[k] = cnt
+        splits[k + 1] = keys[hi - 1] if cnt > 0 else splits[k]
+    splits[num_shards] = INF_KEY
+    return padded, splits, counts
+
+
+def build_store(triples: np.ndarray, num_shards: int = 1) -> TripleStore:
+    """triples: (N, 3) int32. Bulk load (the paper's Table 4 operation)."""
+    s, p, o = triples[:, 0], triples[:, 1], triples[:, 2]
+    k_spo = np.sort(pack3(s, p, o))
+    k_ops = np.sort(pack3(o, p, s))
+    # dedup (RDF set semantics)
+    k_spo = np.unique(k_spo)
+    k_ops = np.unique(k_ops)
+    spo, sp_splits, sp_counts = _shard_sorted(k_spo, num_shards)
+    ops, op_splits, op_counts = _shard_sorted(k_ops, num_shards)
+    return TripleStore(
+        keys_spo=jnp.asarray(spo), keys_ops=jnp.asarray(ops),
+        splits_spo=jnp.asarray(sp_splits), splits_ops=jnp.asarray(op_splits),
+        counts_spo=jnp.asarray(sp_counts), counts_ops=jnp.asarray(op_counts),
+        n_triples=int(len(k_spo)),
+    )

@@ -1,0 +1,2 @@
+from repro.data.lm_data import batch_for_step, tokens_for  # noqa: F401
+from repro.data.rdf_gen import lubm_like, sp2b_like  # noqa: F401

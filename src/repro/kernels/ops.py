@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container kernels run with interpret=True (Mosaic custom calls
+do not lower on the CPU backend); on TPU the same entry points compile
+natively. The jnp fallbacks in models/ and core/ are numerically identical
+(validated in tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rdf import BITS, MAX_ID
+from repro.kernels import flash_attention as _fa
+from repro.kernels import searchsorted as _ss
+
+
+def unpack_to_cols(keys: jax.Array) -> jax.Array:
+    """Packed int64 composite keys -> (N, 3) int32 lexicographic columns."""
+    k = keys.astype(jnp.int64)
+    mask = jnp.int64(MAX_ID)
+    # INF_KEY padding maps to all-max columns (stays a +inf sentinel)
+    c0 = jnp.minimum((k >> (2 * BITS)) & ((1 << 22) - 1), MAX_ID + 1)
+    c1 = (k >> BITS) & mask
+    c2 = k & mask
+    return jnp.stack([c0, c1, c2], -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_k", "block_q"))
+def searchsorted(keys: jax.Array, queries: jax.Array, *,
+                 interpret: bool = True, block_k: int = 2048,
+                 block_q: int = 256) -> jax.Array:
+    """Drop-in for jnp.searchsorted(keys, queries) on packed int64 keys."""
+    return _ss.searchsorted3(unpack_to_cols(keys), unpack_to_cols(queries),
+                             block_k=block_k, block_q=block_q,
+                             interpret=interpret).astype(jnp.int64)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True,
+                    block_q: int = 512, block_kv: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)

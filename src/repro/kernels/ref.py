@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def searchsorted_ref(keys: jax.Array, queries: jax.Array) -> jax.Array:
+    """keys: (M,) sorted int64; queries: (Q,) int64 -> 'left' ranks."""
+    return jnp.searchsorted(keys, queries).astype(jnp.int32)
+
+
+def searchsorted3_ref(keys3: jax.Array, queries3: jax.Array) -> jax.Array:
+    """Lexicographic 3-column searchsorted via packed int64 compare."""
+    def pack(c):
+        c = c.astype(jnp.int64)
+        return (c[:, 0] << 42) | (c[:, 1] << 21) | c[:, 2]
+    return jnp.searchsorted(pack(keys3), pack(queries3)).astype(jnp.int32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Full-score reference attention. q: (b,sq,h,e), k/v: (b,skv,g,e)."""
+    b, sq, h, e = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    scale = scale or e ** -0.5
+    qg = q.reshape(b, sq, g, h // g, e)
+    s = jnp.einsum("bqgre,bkge->bgrqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkge->bqgre", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, e).astype(q.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: blocked lexicographic searchsorted — the index GET.
+
+The MAPSIN hot-spot is rank-finding probes against the sorted composite-key
+index (HBase GET -> binary search). A GPU port would do per-thread binary
+search (divergent, gather-heavy); the TPU-native rethink (DESIGN.md §2):
+
+  * keys live as THREE int32 columns (s, p, o in index order) — TPU has no
+    native int64 vectors, and lexicographic compare on 3 x int32 is pure VPU.
+  * rank(q) = #{keys < q}, accumulated key-block by key-block over the grid;
+    inside a (Bq x Bk) tile the compare matrix is one vectorized op.
+  * sortedness is exploited with scalar block bounds + `pl.when`: a key block
+    entirely below every query in the tile contributes its size without any
+    elementwise work; entirely above contributes zero — the grid walks the
+    index like a B-tree, element compares only at boundary blocks.
+
+VMEM per step: Bk*3 + Bq*3 int32 + (Bq x Bk) compare tile. Defaults
+(Bq=256, Bk=2048) ≈ 2.2 MB — comfortably inside the ~16 MB VMEM budget,
+and Bk=2048 int32 rows are (16, 128)-lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _less3(a0, a1, a2, b0, b1, b2):
+    """Lexicographic (a0,a1,a2) < (b0,b1,b2), elementwise."""
+    return (a0 < b0) | ((a0 == b0) & ((a1 < b1) | ((a1 == b1) & (a2 < b2))))
+
+
+def _kernel(k_ref, q_ref, out_ref, *, block_k: int, nk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ks0, ks1, ks2 = k_ref[:, 0], k_ref[:, 1], k_ref[:, 2]
+    qs0, qs1, qs2 = q_ref[:, 0], q_ref[:, 1], q_ref[:, 2]
+
+    # scalar block bounds (keys sorted; padding rows are +INF sentinels)
+    kmax = (ks0[-1], ks1[-1], ks2[-1])
+    kmin = (ks0[0], ks1[0], ks2[0])
+    qmin0 = jnp.min(qs0)
+    # conservative scalar tests: whole key block strictly below ALL queries?
+    blk_below = _less3(kmax[0], kmax[1], kmax[2],
+                       jnp.min(qs0), jnp.min(qs1) * 0 - (1 << 30),
+                       jnp.min(qs2) * 0 - (1 << 30))
+    # whole key block >= ALL queries? (kmin >= max query)
+    blk_above = ~_less3(kmin[0], kmin[1], kmin[2],
+                        jnp.max(qs0), jnp.max(qs1) * 0 + (1 << 30),
+                        jnp.max(qs2) * 0 + (1 << 30))
+
+    @pl.when(blk_below)
+    def _all():  # every key in block < every query: add block size
+        out_ref[...] = out_ref[...] + block_k
+
+    @pl.when(jnp.logical_not(blk_below) & jnp.logical_not(blk_above))
+    def _boundary():  # elementwise compare tile
+        lt = _less3(ks0[:, None], ks1[:, None], ks2[:, None],
+                    qs0[None, :], qs1[None, :], qs2[None, :])
+        out_ref[...] = out_ref[...] + jnp.sum(lt.astype(jnp.int32), axis=0)
+
+
+def searchsorted3(keys3: jax.Array, queries3: jax.Array, *,
+                  block_k: int = 2048, block_q: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """keys3: (M, 3) int32 lexicographically sorted (pad with INT32_MAX rows);
+    queries3: (Q, 3) int32. Returns ranks (Q,) int32 ('left' semantics)."""
+    m, q = keys3.shape[0], queries3.shape[0]
+    pad_k = (-m) % block_k
+    pad_q = (-q) % block_q
+    if pad_k:
+        keys3 = jnp.pad(keys3, ((0, pad_k), (0, 0)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    if pad_q:
+        queries3 = jnp.pad(queries3, ((0, pad_q), (0, 0)),
+                           constant_values=jnp.iinfo(jnp.int32).max)
+    nk = keys3.shape[0] // block_k
+    nq = queries3.shape[0] // block_q
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, nk=nk),
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((block_k, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q, 3), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((queries3.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(keys3, queries3)
+    return out[:q]

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we jit the right step function (train_step / prefill_step /
+decode_step) with fully sharded abstract inputs (ShapeDtypeStruct — zero
+allocation), compile for the 16x16 single-pod and 2x16x16 multi-pod meshes,
+and record:
+  * memory_analysis()        — bytes/device (proves it fits; §Dry-run)
+  * cost_analysis()          — HLO FLOPs + bytes        (roofline terms)
+  * collective bytes         — parsed from the post-SPMD HLO text
+The per-cell JSON lands in experiments/dryrun/ and feeds §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.common import dump_json
+from repro.configs import SHAPES, get_config, list_archs, runnable_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.models import (build_model, input_defs, make_decode_step,
+                          make_prefill_step, make_train_step)
+from repro.models.api import default_micro_batches
+from repro.models.params import abstract_tree
+from repro.optim import OptConfig, opt_state_defs
+from repro.sharding.rules import make_rules
+
+COLLECTIVE_RE = re.compile(
+    r"(\w+)\[([\d,]*)\].* (all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the (post-SPMD,
+    per-device) HLO. Returns bytes per collective kind."""
+    out: dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * DTYPE_BYTES[dt]
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, opt_cfg=None,
+               overrides: dict | None = None,
+               rules_overrides: dict | None = None):
+    """Returns (jitted fn, abstract args tuple) for one cell."""
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    rules = make_rules(mesh, cfg, shape, **(rules_overrides or {}))
+    model = build_model(cfg, mesh, rules)
+    micro = default_micro_batches(cfg, shape, mesh)
+    if opt_cfg is None:
+        # memory-floor models: bf16 optimizer moments + bf16 grad accumulation
+        big = cfg.n_params() > 100e9
+        opt_cfg = OptConfig(moment_dtype="bfloat16" if big else "float32")
+    bdefs = input_defs(cfg, shape, micro)
+    abstract_batch = abstract_tree(bdefs, rules)
+    pdefs = model.param_defs()
+    abstract_params = abstract_tree(pdefs, rules)
+    if shape.kind == "train":
+        odefs = opt_state_defs(pdefs, opt_cfg)
+        abstract_opt = abstract_tree(odefs, rules)
+        import jax.numpy as jnp
+        accum = jnp.bfloat16 if opt_cfg.moment_dtype == "bfloat16" else jnp.float32
+        fn = make_train_step(model, opt_cfg, micro, accum_dtype=accum)
+        return fn, (abstract_params, abstract_opt, abstract_batch), cfg, rules
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        return fn, (abstract_params, abstract_batch), cfg, rules
+    cdefs = model.cache_defs(shape.global_batch, shape.seq_len)
+    abstract_cache = abstract_tree(cdefs, rules)
+    fn = make_decode_step(model)
+    return fn, (abstract_params, abstract_cache, abstract_batch), cfg, rules
+
+
+def analytic_memory(arch: str, shape_name: str, mesh, overrides=None,
+                    rules_overrides=None) -> dict:
+    """Exact per-device resident bytes (params/opt/cache/inputs + remat
+    stash) from the sharded ParamDef trees — the TPU 'fits' criterion.
+    (The CPU backend's temp_size includes f32 copies of every bf16 weight,
+    an artifact that does not exist on TPU where the MXU eats bf16.)"""
+    from repro.models.params import sharded_bytes_per_device
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    rules = make_rules(mesh, cfg, shape, **(rules_overrides or {}))
+    model = build_model(cfg, mesh, rules)
+    micro = default_micro_batches(cfg, shape, mesh)
+    out = {"micro_batches": micro}
+    pdefs = model.param_defs()
+    out["params"] = sharded_bytes_per_device(pdefs, rules)
+    if shape.kind == "train":
+        big = cfg.n_params() > 100e9
+        ocfg = OptConfig(moment_dtype="bfloat16" if big else "float32")
+        out["opt"] = sharded_bytes_per_device(opt_state_defs(pdefs, ocfg), rules)
+        out["grad_accum"] = out["params"] * (1 if big else 2) if micro > 1 else 0
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        rows_local = max(shape.global_batch // micro // dp, 1)
+        out["remat_stash"] = (cfg.num_layers * rows_local * shape.seq_len
+                              * cfg.d_model * 2)
+    if shape.kind == "decode":
+        cdefs = model.cache_defs(shape.global_batch, shape.seq_len)
+        out["cache"] = sharded_bytes_per_device(cdefs, rules)
+    out["batch"] = sharded_bytes_per_device(input_defs(cfg, shape, micro), rules)
+    out["total"] = sum(v for k, v in out.items() if k != "micro_batches")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             overrides: dict | None = None, tag: str = "",
+             rules_overrides: dict | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, cfg, rules = build_cell(arch, shape_name, mesh,
+                                      overrides=overrides,
+                                      rules_overrides=rules_overrides)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # backend without memory analysis
+            mem["error"] = str(e)
+        cost = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0 {}", "bytes accessed output {}")}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "tag": tag, "chips": n_chips,
+        "kind": SHAPES[shape_name].kind,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "seq_len": SHAPES[shape_name].seq_len,
+        "global_batch": SHAPES[shape_name].global_batch,
+        "memory_analysis": mem,
+        "analytic_memory": analytic_memory(arch, shape_name, mesh, overrides, rules_overrides),
+        "cost_analysis": cost,
+        "collective_bytes": coll,
+        "hlo_bytes": len(hlo),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "kv_mode": rules.kv_mode,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+    dump_json(report, path)
+    if verbose:
+        per_dev = mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)
+        ana = report["analytic_memory"]["total"]
+        print(f"[dryrun] {arch:20s} {shape_name:12s} {mesh_name:10s} "
+              f"flops={cost.get('flops', 0):.3e} coll={sum(coll.values()):.3e}B "
+              f"mem/dev={per_dev/2**30:.2f}GiB resid/dev={ana/2**30:.2f}GiB "
+              f"compile={t_compile:.0f}s")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else runnable_shapes(cfg))
+        for sh in shapes:
+            cells.append((arch, sh.name))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, args.out)
+            except Exception as e:
+                failures.append((arch, shape, mp, str(e)))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e}")
+                traceback.print_exc(limit=3)
+    print(f"[dryrun] done: {len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Roofline report: merge dry-run artifacts with the analytic cost model.
+
+For every (arch x shape x mesh) JSON under experiments/dryrun/ emit the three
+terms (compute / memory / collective, in seconds), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and the per-device residency — as a markdown table
+(EXPERIMENTS.md §Roofline) and a machine-readable JSON.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.costmodel import cost_cell
+
+MESH_SHAPES = {"pod16x16": {"data": 16, "model": 16},
+               "pod2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def analyze(path: str) -> dict:
+    r = json.load(open(path))
+    if r.get("tag"):
+        return None  # perf-iteration artifacts are reported in §Perf
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    mesh_shape = MESH_SHAPES[r["mesh"]]
+    micro = r.get("analytic_memory", {}).get("micro_batches", 1)
+    # EP rules always fully shard expert weights (over data and/or model)
+    kw = {"assume_ep": True} if (cfg.num_experts and shape.kind == "train") else {}
+    cost = cost_cell(cfg, shape, mesh_shape, micro, **kw)
+    terms = cost.terms(r["chips"])
+    resid = r.get("analytic_memory", {}).get("total", 0)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "chips": r["chips"],
+        **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "dominant", "useful_ratio",
+                                 "roofline_fraction")},
+        "model_flops": cost.model_flops,
+        "analytic_flops": cost.flops,
+        "hlo_flops_raw": r["cost_analysis"].get("flops", 0),
+        "hlo_collective_bytes_raw": sum(r["collective_bytes"].values()),
+        "analytic_coll_bytes": cost.coll_bytes,
+        "resident_gib": resid / 2**30,
+        "fits_16g": resid < 16 * 2**30,
+        "compile_s": r.get("compile_s"),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="mesh for the markdown table (the single-pod "
+                         "roofline per assignment)")
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        row = analyze(path)
+        if row:
+            rows.append(row)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    # markdown table (single-pod per assignment)
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful | roofline_frac | resid GiB | fits |")
+    print(hdr)
+    print("|" + "---|" * 10)
+    for r in rows:
+        if r["mesh"] != args.mesh:
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.2f} | {r['resident_gib']:.2f} | "
+              f"{'Y' if r['fits_16g'] else 'N'} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant Trainer (checkpoint/restart, straggler watchdog) on
+whatever devices exist. --smoke uses the reduced config (CPU-friendly);
+without it, the full config is instantiated (requires a real cluster).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.optim import OptConfig
+from repro.runtime import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    else:
+        shape = SHAPES["train_4k"]
+    trainer = Trainer(cfg, shape, args.workdir, OptConfig(warmup_steps=10),
+                      ckpt_every=args.ckpt_every)
+
+    def hook(step, metrics):
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+
+    trainer.run(args.steps, hook=hook)
+    print(f"done; stragglers flagged: {trainer.watchdog.events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.api import (  # noqa: F401
+    build_model, input_defs, make_decode_step, make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,143 @@
+"""Uniform model API: build_model, input defs per shape, step factories.
+
+Every launcher (train.py, serve.py, dryrun.py) goes through this module so
+all 10 architectures expose identical entry points:
+
+    train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+    prefill_step(params, batch)                 -> (logits, cache)
+    decode_step(params, cache, tokens)          -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.params import pdef
+from repro.models.recurrent import RecurrentGemmaLM
+from repro.models.transformer import VIT_DIM, TransformerLM
+from repro.models.xlstm import XLSTMLM
+from repro.optim.adamw import OptConfig, adamw_update
+
+
+def build_model(cfg: ModelConfig, mesh=None, rules=None):
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg, mesh, rules)
+    if cfg.family == "hybrid":
+        return RecurrentGemmaLM(cfg, mesh, rules)
+    return TransformerLM(cfg, mesh, rules)
+
+
+def input_defs(cfg: ModelConfig, shape: ShapeConfig,
+               micro_batches: int = 1) -> dict[str, Any]:
+    """ParamDef tree for the step inputs of one (arch x shape) cell.
+
+    With micro_batches > 1, train inputs carry a leading (unsharded)
+    microbatch dim: (n_micro, rows, seq) — the host pipeline pre-shapes, so
+    no resharding happens inside the step (see make_train_step).
+
+    Modality frontends are STUBS per assignment: pixtral receives
+    precomputed ViT patch embeddings, musicgen precomputed EnCodec codes.
+    """
+    b = shape.global_batch
+    s = shape.seq_len
+    kind = shape.kind
+    tok_axes: tuple = ("batch", "seq")
+    lead: tuple[int, ...] = ()
+    lead_axes: tuple = ()
+    if kind == "train" and micro_batches > 1:
+        assert b % micro_batches == 0
+        b = b // micro_batches
+        lead, lead_axes = (micro_batches,), (None,)
+    if kind == "decode":
+        if cfg.family == "audio":
+            return {"tokens": pdef((b, 1, cfg.num_codebooks),
+                                   tok_axes + (None,), "int32", "zeros")}
+        return {"tokens": pdef((b, 1), tok_axes, "int32", "zeros")}
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patches
+        out["tokens"] = pdef(lead + (b, s_text), lead_axes + tok_axes, "int32", "zeros")
+        out["patch_embeds"] = pdef(lead + (b, cfg.num_patches, VIT_DIM),
+                                   lead_axes + ("batch", None, None),
+                                   cfg.activation_dtype, "zeros")
+        if kind == "train":
+            out["labels"] = pdef(lead + (b, s_text), lead_axes + tok_axes, "int32", "zeros")
+        return out
+    if cfg.family == "audio":
+        out["tokens"] = pdef(lead + (b, s, cfg.num_codebooks),
+                             lead_axes + tok_axes + (None,), "int32", "zeros")
+        if kind == "train":
+            out["labels"] = pdef(lead + (b, s, cfg.num_codebooks),
+                                 lead_axes + tok_axes + (None,), "int32", "zeros")
+        return out
+    out["tokens"] = pdef(lead + (b, s), lead_axes + tok_axes, "int32", "zeros")
+    if kind == "train":
+        out["labels"] = pdef(lead + (b, s), lead_axes + tok_axes, "int32", "zeros")
+    return out
+
+
+def default_micro_batches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Pick the microbatch count so the per-microbatch remat stash
+    (L x rows_local x seq x d_model, bf16) stays ~<= 2 GiB/chip."""
+    if shape.kind != "train" or mesh is None:
+        return 1
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    best = 1
+    for n in range(1, shape.global_batch + 1):
+        rows = shape.global_batch // n
+        # microbatch rows must stay evenly DP-shardable
+        if shape.global_batch % n or rows % dp or rows < dp:
+            continue
+        rows_local = rows // dp
+        stash = cfg.num_layers * rows_local * shape.seq_len * cfg.d_model * 2
+        best = n
+        if stash <= 2 * 2**30:
+            break
+    return best
+
+
+def make_train_step(model, opt_cfg: OptConfig, micro_batches: int = 1,
+                    accum_dtype=None):
+    """Grad-accumulating train step. The microbatch loop is a non-
+    differentiated lax.scan, so activation memory = ONE microbatch's remat
+    stash; gradients accumulate in a params-sharded carry (fp32 by default;
+    bf16 for memory-floor models — tracked as 'gradient compression')."""
+    accum_dtype = accum_dtype or jnp.float32
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if micro_batches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def body(acc, micro):
+                loss, metrics, grads = grads_of(params, micro)
+                acc = jax.tree.map(lambda a, g: a + g.astype(accum_dtype) / micro_batches,
+                                   acc, grads)
+                return acc, (loss, metrics)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, batch)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+    return decode_step

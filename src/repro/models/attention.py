@@ -1,0 +1,319 @@
+"""Attention implementations: blockwise-flash (XLA), exact-triangle variant,
+naive reference, sliding-window local attention, decode steps, and MLA.
+
+All functions take q: (b, sq, h, eq), k: (b, skv, g, eq), v: (b, skv, g, ev)
+with h = g * rep (GQA). Softmax statistics are fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _split_heads(q: jax.Array, g: int) -> jax.Array:
+    b, s, h, e = q.shape
+    return q.reshape(b, s, g, h // g, e)
+
+
+def _scores(qb: jax.Array, kb: jax.Array, scale: float) -> jax.Array:
+    """qb: (b, Bq, g, r, e), kb: (b, Bk, g, e) -> (b, g, r, Bq, Bk) fp32."""
+    s = jnp.einsum("bqgre,bkge->bgrqk", qb, kb,
+                   preferred_element_type=jnp.float32)
+    return s * scale
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, kv_len: int,
+          causal: bool, window: int) -> jax.Array:
+    m = (k_pos[None, :] < kv_len)
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m  # (Bq, Bk)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """Reference: materializes the full score matrix."""
+    b, sq, h, eq = q.shape
+    g = k.shape[2]
+    scale = scale or eq ** -0.5
+    qg = _split_heads(q, g)
+    s = jnp.einsum("bqgre,bkge->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(sq) + (k.shape[1] - sq)  # right-aligned (decode-friendly)
+    k_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, k_pos, k.shape[1], causal, window)
+    s = jnp.where(m[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgf->bqgrf", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _flash_q_block(qb, k, v, q_start, kv_len, *, causal, window, block_kv,
+                   scale, sink_stats=False, kv_producer=None, nk=None, ev=None):
+    """Online-softmax over kv blocks for one q block.
+
+    qb: (b, Bq, g, r, e). Returns (o, m, l) if sink_stats else o.
+    kv_producer(j) -> (kj, vj) materializes one kv block on the fly (used by
+    MLA prefill to up-project the latent per block instead of holding the
+    full per-head K/V).
+    """
+    b, bq, g, r, e = qb.shape
+    ev = v.shape[-1] if ev is None else ev
+    nk = (k.shape[1] // block_kv) if nk is None else nk
+    q_pos = q_start + jnp.arange(bq)
+
+    @jax.checkpoint  # recompute block scores in backward (flash-style bwd)
+    def body(carry, j):
+        o, m, l = carry
+        if kv_producer is not None:
+            kj, vj = kv_producer(j)
+        else:
+            kj = jax.lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, axis=1)
+        s = _scores(qb, kj, scale)  # (b, g, r, Bq, Bk)
+        k_pos = j * block_kv + jnp.arange(block_kv)
+        msk = _mask(q_pos, k_pos, kv_len, causal, window)[None, None, None]
+        s = jnp.where(msk, s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * msk
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrqk,bkgf->bgrqf", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        o = o * alpha[..., None] + pv
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((b, g, r, bq, ev), jnp.float32)
+    m0 = jnp.full((b, g, r, bq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, g, r, bq), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), jnp.arange(nk))
+    if sink_stats:
+        return o, m, l
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, block_q=512,
+                        block_kv=1024, scale=None):
+    """Memory-efficient attention: double scan (q blocks x kv blocks) with
+    online softmax — XLA's structural equivalent of flash attention. Baseline
+    causal variant computes all (q, kv) block pairs (mask-only skipping)."""
+    b, sq, h, eq = q.shape
+    g = k.shape[2]
+    ev = v.shape[-1]
+    scale = scale or eq ** -0.5
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, k.shape[1])
+    pad_q = (-sq) % block_q
+    pad_kv = (-k.shape[1]) % block_kv
+    kv_len = k.shape[1]
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    qg = _split_heads(q, g)
+    nq = qg.shape[1] // block_q
+    qblocks = qg.reshape(b, nq, block_q, g, h // g, eq).swapaxes(0, 1)
+
+    @jax.checkpoint  # per-q-block remat: bwd never holds >1 block's scores
+    def per_q(i, qb):
+        o = _flash_q_block(qb, k, v, i * block_q, kv_len, causal=causal,
+                           window=window, block_kv=block_kv, scale=scale)
+        return o  # (b, g, r, Bq, ev)
+
+    o = jax.lax.map(lambda t: per_q(t[0], t[1]), (jnp.arange(nq), qblocks))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block_q, h, ev)
+    return o[:, :sq].astype(v.dtype)
+
+
+def triangle_attention(q, k, v, *, window=0, block_q=512, block_kv=1024,
+                       scale=None):
+    """Exact-FLOP causal attention: unrolled over q blocks, each scanning only
+    kv blocks [0, i]. HLO grows O(nq) but compute matches the causal triangle
+    (the §Perf 'xla_tri' hillclimb variant; see EXPERIMENTS.md)."""
+    b, sq, h, eq = q.shape
+    g = k.shape[2]
+    ev = v.shape[-1]
+    scale = scale or eq ** -0.5
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, k.shape[1])
+    assert sq % block_q == 0 and k.shape[1] % block_kv == 0, "pad first"
+    assert block_q % block_kv == 0 or block_kv % block_q == 0
+    qg = _split_heads(q, g)
+    nq = sq // block_q
+    outs = []
+    for i in range(nq):
+        qb = qg[:, i * block_q:(i + 1) * block_q]
+        hi = min(((i + 1) * block_q + block_kv - 1) // block_kv * block_kv,
+                 k.shape[1])
+        o = _flash_q_block(qb, k[:, :hi], v[:, :hi], i * block_q, hi,
+                           causal=True, window=window, block_kv=block_kv,
+                           scale=scale)
+        outs.append(o)
+    o = jnp.stack(outs, axis=1)  # (b, nq, g, r, Bq, ev)
+    o = o.transpose(0, 1, 4, 2, 3, 5).reshape(b, sq, h, ev)
+    return o.astype(v.dtype)
+
+
+def local_attention(q, k, v, *, window, block_q=512, scale=None):
+    """Sliding-window causal attention with O(sq * window) compute: for each
+    q block, only the kv slice [q_start - window, q_start + Bq) is touched."""
+    b, sq, h, eq = q.shape
+    g = k.shape[2]
+    ev = v.shape[-1]
+    skv = k.shape[1]
+    scale = scale or eq ** -0.5
+    block_q = min(block_q, sq)
+    pad_q = (-sq) % block_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qg = _split_heads(q, g)
+    nq = qg.shape[1] // block_q
+    span = min(window + block_q, skv)
+    qblocks = qg.reshape(b, nq, block_q, g, h // g, eq).swapaxes(0, 1)
+
+    @jax.checkpoint  # see blockwise_attention
+    def per_q(i, qb):
+        q_start = i * block_q
+        start = jnp.clip(q_start - window, 0, skv - span)
+        kj = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        s = _scores(qb, kj, scale)
+        q_pos = q_start + jnp.arange(block_q)
+        k_pos = start + jnp.arange(span)
+        msk = ((k_pos[None] <= q_pos[:, None]) &
+               (q_pos[:, None] - k_pos[None] < window) &
+               (k_pos[None] < skv))[None, None, None]
+        s = jnp.where(msk, s, NEG)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m) * msk
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bgrqk,bkgf->bgrqf", (p / jnp.maximum(l, 1e-30)).astype(v.dtype), vj)
+        return o
+
+    o = jax.lax.map(lambda t: per_q(t[0], t[1]), (jnp.arange(nq), qblocks))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block_q, h, ev)
+    return o[:, :sq].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, scale=None):
+    """One-step decode: q (b, 1, h, eq) against cache (b, S, g, e*).
+
+    cur_len: int32 — number of valid cache positions (including this step's
+    freshly inserted kv). For rotating window caches pass window=W and the
+    cache length S == W; masking is slot-validity based.
+    """
+    b, _, h, eq = q.shape
+    g = k_cache.shape[2]
+    scale = scale or eq ** -0.5
+    qg = q.reshape(b, g, h // g, eq)
+    s = jnp.einsum("bgre,bsge->bgrs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(k_cache.shape[1])
+    if window:
+        valid = slots < jnp.minimum(cur_len, window)
+    else:
+        valid = slots < cur_len
+    s = jnp.where(valid[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgf->bgrf", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, h, v_cache.shape[-1])
+
+
+def attention(q, k, v, *, impl="xla", causal=True, window=0, block_q=512,
+              block_kv=1024, scale=None):
+    """Dispatch on implementation. `pallas_interpret` validates the TPU
+    Pallas kernel body on CPU; `xla` is the default lowering path."""
+    if window and causal and impl in ("xla", "xla_tri"):
+        return local_attention(q, k, v, window=window, block_q=block_q, scale=scale)
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "xla_tri" and causal:
+        return triangle_attention(q, k, v, window=window, block_q=block_q,
+                                  block_kv=block_kv, scale=scale)
+    if impl == "pallas_interpret":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv, scale=scale)
+
+
+def mla_prefill_attention(q, ckv, k_pe, kv_b_k, kv_b_v, *, scale,
+                          block_q=512, block_kv=1024):
+    """Blockwise causal MLA attention that up-projects the latent kv cache
+    PER BLOCK — the full per-head K/V (b, s, h, e) is never materialized
+    (at 32k x 128 heads that tensor is ~4 GiB/device-pass; the latent is 9x
+    smaller). q: (b, s, h, dn+dr); ckv: (b, s, c); k_pe: (b, s, dr)."""
+    b, sq, h, eq = q.shape
+    dn = kv_b_k.shape[-1]
+    dv = kv_b_v.shape[-1]
+    skv = ckv.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad_kv), (0, 0)))
+        k_pe = jnp.pad(k_pe, ((0, 0), (0, pad_kv), (0, 0)))
+    sq_p, skv_p = q.shape[1], ckv.shape[1]
+    qg = q.reshape(b, sq_p, h, 1, eq)  # g == h, rep == 1
+    nq = sq_p // block_q
+    nk = skv_p // block_kv
+    qblocks = qg.reshape(b, nq, block_q, h, 1, eq).swapaxes(0, 1)
+
+    def producer(j):
+        c_j = jax.lax.dynamic_slice_in_dim(ckv, j * block_kv, block_kv, axis=1)
+        pe_j = jax.lax.dynamic_slice_in_dim(k_pe, j * block_kv, block_kv, axis=1)
+        kn = jnp.einsum("bkc,chn->bkhn", c_j, kv_b_k)
+        vv = jnp.einsum("bkc,chv->bkhv", c_j, kv_b_v)
+        kk = jnp.concatenate(
+            [kn, jnp.broadcast_to(pe_j[:, :, None, :], kn.shape[:3] + (pe_j.shape[-1],))],
+            axis=-1)
+        return kk, vv
+
+    @jax.checkpoint
+    def per_q(i, qb):
+        return _flash_q_block(qb, None, None, i * block_q, skv, causal=True,
+                              window=0, block_kv=block_kv, scale=scale,
+                              kv_producer=producer, nk=nk, ev=dv)
+
+    o = jax.lax.map(lambda t: per_q(t[0], t[1]), (jnp.arange(nq), qblocks))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block_q, h, dv)
+    return o[:, :sq].astype(ckv.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_absorbed_decode(q_nope, q_pe, ckv_cache, kpe_cache, kv_b_k, kv_b_v,
+                        cur_len, *, scale):
+    """Matrix-absorbed MLA decode: attention runs in the compressed KV space.
+
+    q_nope: (b, h, dn), q_pe: (b, h, dr); ckv_cache: (b, S, c);
+    kpe_cache: (b, S, dr); kv_b_k: (c, h, dn); kv_b_v: (c, h, dv).
+    Never materializes per-head K/V for the 32k cache — scores are taken
+    against the c-dim latent directly (the paper-era 'ship only what you
+    need' economy applied to the KV cache).
+    """
+    qc = jnp.einsum("bhn,chn->bhc", q_nope, kv_b_k)         # absorb W_UK
+    s = jnp.einsum("bhc,bsc->bhs", qc.astype(jnp.float32),
+                   ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_pe.astype(jnp.float32),
+                       kpe_cache.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(ckv_cache.shape[1]) < cur_len
+    s = jnp.where(valid[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    oc = jnp.einsum("bhs,bsc->bhc", p.astype(ckv_cache.dtype), ckv_cache)
+    o = jnp.einsum("bhc,chv->bhv", oc, kv_b_v)              # absorb W_UV
+    return o  # (b, h, dv)

@@ -1,0 +1,60 @@
+"""Token embedding lookups.
+
+`mapsin` path: the paper's technique as a first-class LM feature. The table
+is vocab-sharded over the `model` axis (a distributed sorted index, row key =
+token id); lookups ship *token ids* to the owner shard and *hit rows* back
+(psum), instead of all-gathering the table — the map-side index nested-loop
+join economy ("transfer only the data that is really needed", §4.1 of the
+paper) applied to embeddings. For decode steps this replaces an O(vocab * d)
+gather with O(new_tokens * d) traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def dense_embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def mapsin_embed(table: jax.Array, tokens: jax.Array, mesh, rules) -> jax.Array:
+    """table: (v, d) sharded P('model', ...); tokens: (b, s) sharded on batch.
+
+    Each model-axis shard resolves the token ids that fall in its local vocab
+    range (an HBase-region GET against its sorted local index) and the psum
+    routes only the resolved d-vectors back.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return dense_embed(table, tokens)
+    msize = mesh.shape["model"]
+    v = table.shape[0]
+    if v % msize:
+        return dense_embed(table, tokens)
+    vloc = v // msize
+    # Token ids are 4 B each — replicating them into the shard_map is
+    # negligible traffic; only table rows (the heavy side) stay sharded.
+    n_tok_dims = tokens.ndim
+    tok_spec = P(*([None] * n_tok_dims))
+    tbl_spec = P("model", None)
+    out_spec = P(*([None] * (n_tok_dims + 1)))
+
+    def f(tbl, tok):
+        lo = jax.lax.axis_index("model") * vloc
+        local = tok - lo
+        hit = (local >= 0) & (local < vloc)
+        rows = jnp.take(tbl, jnp.clip(local, 0, vloc - 1), axis=0)
+        rows = rows * hit[..., None].astype(rows.dtype)
+        return jax.lax.psum(rows, axis_name="model")
+
+    return shard_map(f, mesh=mesh, in_specs=(tbl_spec, tok_spec),
+                     out_specs=out_spec, check_rep=False)(table, tokens)
+
+
+def embed(table: jax.Array, tokens: jax.Array, impl: str, mesh=None,
+          rules=None) -> jax.Array:
+    if impl == "mapsin":
+        return mapsin_embed(table, tokens, mesh, rules)
+    return dense_embed(table, tokens)

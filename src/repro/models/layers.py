@@ -1,0 +1,102 @@
+"""Elementary layers shared by all architectures (pure functions on pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings (half-dim)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def geglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+          w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(g) * u, w_down)
+
+
+def causal_conv1d(x: jax.Array, kernel: jax.Array,
+                  state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal 1-D convolution.
+
+    x: (b, s, c); kernel: (w, c). Returns (y, new_state) where state is the
+    trailing (w-1) inputs for streaming decode.
+    """
+    w = kernel.shape[0]
+    b, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((b, w - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (b, s+w-1, c)
+    y = jnp.zeros_like(x)
+    for i in range(w):
+        y = y + xp[:, i:i + s, :] * kernel[i]
+    new_state = xp[:, -(w - 1):, :] if w > 1 else jnp.zeros((b, 0, c), x.dtype)
+    return y, new_state
+
+
+def softmax_xent_chunked(hidden: jax.Array, head_w: jax.Array,
+                         labels: jax.Array, mask: jax.Array,
+                         chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing full (b, s, vocab) fp32 logits.
+
+    hidden: (b, s, d); head_w: (d, v) [vocab TP-sharded]; labels/mask: (b, s).
+    Scans over sequence chunks; logits per chunk stay (b, chunk, v_local).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def chunk_loss(h, y, m):
+        logits = jnp.einsum("bsd,dv->bsv", h, head_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - lab) * m), jnp.sum(m)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, y, m = xs
+        l, c = chunk_loss(h, y, m)
+        return (tot + l, cnt + c), None
+
+    hs = hidden[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ys = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    ms = mask[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ys, ms))
+    if rem:
+        l, c = chunk_loss(hidden[:, n * chunk:], labels[:, n * chunk:], mask[:, n * chunk:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer with sort-based routed dispatch.
+
+The dispatch is structurally the MAPSIN pattern (DESIGN.md §3): tokens are
+*routed to the shard that owns the expert* — only the top-k routed
+activations travel, never replicated expert weights and never an
+all-tokens-to-all-experts shuffle. Under GSPMD (experts sharded over the
+`model` axis, tokens over `data`) the scatter/gather pair lowers to
+all-to-all-style collectives whose bytes are capacity-bounded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ceil_div
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, top_k: int,
+                num_experts: int):
+    """Returns (weights (T, k) fp32, expert_ids (T, k) int32, aux_loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = num_experts * jnp.sum(me * ce)
+    return weights, ids, aux
+
+
+def capacity_of(num_tokens: int, num_experts: int, top_k: int,
+                capacity_factor: float) -> int:
+    return max(ceil_div(int(num_tokens * top_k * capacity_factor), num_experts), 4)
+
+
+def moe_ffn(x: jax.Array, params: dict, *, top_k: int, num_experts: int,
+            capacity_factor: float = 1.25, constrain=None):
+    """x: (T, d) flat tokens. params: router (d,E), w_gate/w_up (E,d,f),
+    w_down (E,f,d), optionally shared_* dense expert weights.
+
+    `constrain(x, *logical_axes)` (optional) pins activation shardings so the
+    per-expert buffers shard over (experts=EP, capacity=DP) — without it
+    GSPMD may replicate the (E, C, d) buffer per chip at 671B scale.
+
+    Returns (y (T, d), aux_loss, dropped_fraction).
+    """
+    t, d = x.shape
+    constrain = constrain or (lambda a, *axes: a)
+    weights, ids, aux = router_topk(x, params["router"], top_k, num_experts)
+    cap = capacity_of(t, num_experts, top_k, capacity_factor)
+
+    # ---- MAPSIN-style routed dispatch: sort (expert, token) pairs ----
+    flat_e = ids.reshape(-1)                                  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # slot within expert = position - first position of that expert id
+    first = jnp.searchsorted(se, jnp.arange(num_experts), side="left")
+    slot = jnp.arange(t * top_k) - first[se]
+    keep = slot < cap
+    dropped = 1.0 - keep.mean()
+    slot = jnp.where(keep, slot, cap)                         # overflow slot
+    # gather tokens into per-expert buffers (E, cap+1, d); +1 = spill row
+    buf = jnp.zeros((num_experts, cap + 1, d), x.dtype)
+    buf = buf.at[se, slot].set(x[st] * keep[:, None].astype(x.dtype))
+    buf = constrain(buf, "experts", "capacity", "embed")
+
+    # ---- expert FFN, batched over experts (EP over `model` axis) ----
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+    y = constrain(y, "experts", "capacity", "embed")
+
+    # ---- combine: route results back to token owners ----
+    out = jnp.zeros((t, d), jnp.float32)
+    contrib = y[se, slot].astype(jnp.float32) * (sw * keep)[:, None]
+    out = out.at[st].add(contrib)
+
+    if "shared_w_gate" in params:
+        from repro.models.layers import swiglu
+        out = out + swiglu(x, params["shared_w_gate"], params["shared_w_up"],
+                           params["shared_w_down"]).astype(jnp.float32)
+    return out.astype(x.dtype), aux, dropped

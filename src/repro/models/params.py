@@ -1,0 +1,114 @@
+"""Parameter definition trees: one source of truth for shapes, init, sharding.
+
+Models declare ``ParamDef`` trees; from the same tree we materialize
+ * concrete params (smoke tests / real training),
+ * ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod dry-run never allocates),
+ * ``PartitionSpec`` trees via the logical-axis ``Rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of, fold_path, tree_map_with_path
+from repro.sharding.rules import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """A dataclass (not NamedTuple) so pytree utils treat it as a leaf."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis per dim (len == ndim)
+    dtype: str = "bfloat16"
+    init: str = "normal"           # normal | zeros | ones
+    scale: float = 0.02
+
+
+def pdef(shape, axes, dtype="bfloat16", init="normal", scale=0.02) -> ParamDef:
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamDef(shape, axes, dtype, init, scale)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked (scan) dim of size n to every def in the tree."""
+    def f(_, d: ParamDef):
+        return ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.dtype, d.init, d.scale)
+    return tree_map_with_path(f, defs)
+
+
+def init_tree(defs: Any, key: jax.Array) -> Any:
+    def make(path, d: ParamDef):
+        dt = dtype_of(d.dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        k = fold_path(key, path)
+        return (jax.random.normal(k, d.shape, jnp.float32) * d.scale).astype(dt)
+    return tree_map_with_path(make, defs)
+
+
+def abstract_tree(defs: Any, rules: Rules | None = None) -> Any:
+    """ShapeDtypeStructs (with shardings when rules given) — zero allocation."""
+    def make(_, d: ParamDef):
+        sharding = rules.sharding(*d.axes) if rules is not None else None
+        return jax.ShapeDtypeStruct(d.shape, dtype_of(d.dtype), sharding=sharding)
+    return tree_map_with_path(make, defs)
+
+
+def pspec_tree(defs: Any, rules: Rules) -> Any:
+    return tree_map_with_path(lambda _, d: rules.pspec(*d.axes), defs)
+
+
+def sharding_tree(defs: Any, rules: Rules) -> Any:
+    return tree_map_with_path(lambda _, d: rules.sharding(*d.axes), defs)
+
+
+def bytes_of(defs: Any) -> int:
+    import numpy as np
+    total = 0
+    for _, d in _iter_defs(defs):
+        total += int(np.prod(d.shape)) * dtype_of(d.dtype).dtype.itemsize
+    return total
+
+
+def sharded_bytes_per_device(defs: Any, rules: Rules) -> int:
+    """Exact per-device resident bytes for a def tree under its shardings
+    (ceil-division per sharded dim, matching GSPMD padding)."""
+    import numpy as np
+    mesh_shape = dict(rules.mesh.shape)
+    total = 0
+    for _, d in _iter_defs(defs):
+        spec = rules.pspec(*d.axes)
+        n = 1
+        for dim, sp in zip(d.shape, tuple(spec) + (None,) * (len(d.shape) - len(spec))):
+            if sp is None:
+                n *= dim
+                continue
+            axes = (sp,) if isinstance(sp, str) else sp
+            k = 1
+            for a in axes:
+                k *= mesh_shape[a]
+            n *= -(-dim // k)
+        total += n * dtype_of(d.dtype).dtype.itemsize
+    return total
+
+
+def _iter_defs(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_defs(v, prefix + (k,))
+    elif isinstance(tree, (list, tuple)) and not is_def(tree):
+        for i, v in enumerate(tree):
+            yield from _iter_defs(v, prefix + (i,))
+    else:
+        yield prefix, tree

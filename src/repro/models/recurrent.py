@@ -1,0 +1,305 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention (2:1).
+
+The RG-LRU is a diagonal linear recurrence h_t = a_t * h_{t-1} + b_t — we
+compute it with `jax.lax.associative_scan` (O(s log s) depth, O(s) work),
+the TPU-native equivalent of the paper's sequential cell. Local attention
+uses the O(s*window) sliding-window implementation from attention.py.
+
+Layer pattern: (rec, rec, attn) macro-blocks scanned 12x, plus the two
+trailing rec blocks (38 = 3*12 + 2) outside the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.common import dtype_of
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import embedding as embed_lib
+from repro.models.layers import (apply_rope, causal_conv1d, geglu, rms_norm,
+                                 softmax_xent_chunked)
+from repro.models.params import pdef, stack_defs
+
+C_LRU = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def rg_lru_scan(u: jax.Array, log_a: jax.Array, h0: jax.Array | None):
+    """u, log_a: (b, s, w) fp32. h_t = a_t h_{t-1} + u_t via associative scan."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h  # (b, s, w)
+
+
+class RecurrentGemmaLM:
+    def __init__(self, cfg: ModelConfig, mesh=None, rules=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.adt = dtype_of(cfg.activation_dtype)
+        pat = cfg.block_pattern or ("rec",)
+        self.layer_types = tuple(pat[i % len(pat)] for i in range(cfg.num_layers))
+        # macro-block decomposition for scan-over-layers
+        self.period = len(pat)
+        self.n_macro = cfg.num_layers // self.period
+        self.n_tail = cfg.num_layers - self.n_macro * self.period
+
+    # ------------------------------------------------------------------
+    def _rec_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, w, pd = c.d_model, c.lru_width, c.param_dtype
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "w_gate_br": pdef((d, w), ("fsdp", "lru"), pd),
+            "w_x": pdef((d, w), ("fsdp", "lru"), pd),
+            "conv": pdef((c.conv_width, w), (None, "lru"), pd, "normal", 0.1),
+            "w_a": pdef((w, w), ("fsdp", "lru"), pd, "normal", 0.01),
+            "b_a": pdef((w,), ("lru",), pd, "zeros"),
+            "w_i": pdef((w, w), ("fsdp", "lru"), pd, "normal", 0.01),
+            "b_i": pdef((w,), ("lru",), pd, "zeros"),
+            "lam": pdef((w,), ("lru",), "float32", "ones"),
+            "w_out": pdef((w, d), ("lru", "fsdp"), pd),
+        }
+
+    def _attn_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, h, g, e, pd = c.d_model, c.num_heads, c.num_kv_heads, c.resolved_head_dim, c.param_dtype
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "wq": pdef((d, h, e), ("fsdp", "heads", "head_dim"), pd),
+            "wk": pdef((d, g, e), ("fsdp", "kv_heads", "head_dim"), pd),
+            "wv": pdef((d, g, e), ("fsdp", "kv_heads", "head_dim"), pd),
+            "wo": pdef((h, e, d), ("heads", "head_dim", "fsdp"), pd),
+        }
+
+    def _mlp_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, f, pd = c.d_model, c.d_ff, c.param_dtype
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "w_gate": pdef((d, f), ("fsdp", "mlp"), pd),
+            "w_up": pdef((d, f), ("fsdp", "mlp"), pd),
+            "w_down": pdef((f, d), ("mlp", "fsdp"), pd),
+        }
+
+    def _macro_defs(self) -> dict[str, Any]:
+        out: dict[str, Any] = {}
+        for i, t in enumerate(self.cfg.block_pattern):
+            mix = self._rec_defs() if t == "rec" else self._attn_defs()
+            out[f"b{i}"] = {"mix": mix, "mlp": self._mlp_defs()}
+        return out
+
+    def param_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, v, pd = c.d_model, c.vocab_size, c.param_dtype
+        defs: dict[str, Any] = {"embed": pdef((v, d), ("vocab", "fsdp"), pd)}
+        if self.n_macro:
+            defs["macros"] = stack_defs(self._macro_defs(), self.n_macro)
+        for j in range(self.n_tail):
+            t = self.cfg.block_pattern[j]
+            mix = self._rec_defs() if t == "rec" else self._attn_defs()
+            defs[f"tail{j}"] = {"mix": mix, "mlp": self._mlp_defs()}
+        defs["final_norm"] = pdef((d,), ("embed",), pd, "ones")
+        defs["lm_head"] = pdef((d, v), ("embed", "vocab"), pd)
+        return defs
+
+    # ------------------------------------------------------------------
+    def _constrain(self, x, *axes):
+        if self.rules is not None and self.mesh is not None:
+            x = jax.lax.with_sharding_constraint(x, self.rules.sharding(*axes))
+        return x
+
+    def _rec_block(self, p, x, *, mode, cache=None):
+        """cache: (h0 (b, w), conv_state (b, cw-1, w)) for decode."""
+        c = self.cfg
+        xs = rms_norm(x, p["norm"], c.norm_eps)
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xs, p["w_gate_br"]))
+        u = jnp.einsum("bsd,dw->bsw", xs, p["w_x"])
+        conv_state = cache[1] if cache is not None else None
+        u, new_conv = causal_conv1d(u, p["conv"], conv_state)
+        uf = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["w_a"].astype(jnp.float32))
+                           + p["b_a"].astype(jnp.float32))
+        i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["w_i"].astype(jnp.float32))
+                           + p["b_i"].astype(jnp.float32))
+        log_a = -C_LRU * jax.nn.softplus(p["lam"]) * r          # (b, s, w), < 0
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+        b_in = beta * (i * uf)
+        if mode == "decode":
+            h0 = cache[0]
+            h = jnp.exp(log_a[:, 0]) * h0 + b_in[:, 0]          # single step
+            h = h[:, None]
+            new_cache = (h[:, 0], new_conv)
+        else:
+            h = rg_lru_scan(b_in, log_a, None)
+            new_cache = (h[:, -1], new_conv) if mode == "prefill" else None
+        y = (h.astype(x.dtype) * gate)
+        out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+        return x + out, new_cache
+
+    def _attn_block(self, p, x, positions, *, mode, cache=None, cur_len=None):
+        c = self.cfg
+        xs = rms_norm(x, p["norm"], c.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", xs, p["wq"])
+        k = jnp.einsum("bsd,dge->bsge", xs, p["wk"])
+        v = jnp.einsum("bsd,dge->bsge", xs, p["wv"])
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        if mode == "decode":
+            kc, vc = cache
+            W = kc.shape[1]
+            idx = cur_len % W
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=1)
+            o = attn_lib.decode_attention(q, kc, vc, cur_len + 1, window=W)
+            new_cache = (kc, vc)
+        else:
+            o = attn_lib.local_attention(q, k, v, window=c.window_size,
+                                         block_q=c.attn_block_q)
+            if mode == "prefill":
+                W = min(c.window_size, k.shape[1])
+                new_cache = (k[:, -W:], v[:, -W:])
+            else:
+                new_cache = None
+        out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+        return x + out, new_cache
+
+    def _block(self, p, x, positions, ltype, *, mode, cache=None, cur_len=None):
+        x = self._constrain(x, "batch", "seq", "embed")
+        if ltype == "rec":
+            x, ncch = self._rec_block(p["mix"], x, mode=mode, cache=cache)
+        else:
+            x, ncch = self._attn_block(p["mix"], x, positions, mode=mode,
+                                       cache=cache, cur_len=cur_len)
+        xs = rms_norm(x, p["mlp"]["norm"], c_eps := self.cfg.norm_eps)
+        x = x + geglu(xs, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+        return x, ncch
+
+    def _macro(self, p, x, positions, *, mode, caches=None, cur_len=None):
+        new_caches = {}
+        for i, t in enumerate(self.cfg.block_pattern):
+            cch = caches[f"b{i}"] if caches is not None else None
+            x, ncch = self._block(p[f"b{i}"], x, positions, t, mode=mode,
+                                  cache=cch, cur_len=cur_len)
+            new_caches[f"b{i}"] = ncch
+        return x, new_caches
+
+    # ------------------------------------------------------------------
+    def cache_defs(self, batch: int, seq_len: int) -> dict[str, Any]:
+        c = self.cfg
+        dt = c.activation_dtype
+        w = c.lru_width
+        W = min(c.window_size, seq_len)
+        g, e = c.num_kv_heads, c.resolved_head_dim
+
+        def mix_cache(t):
+            if t == "rec":
+                return (pdef((batch, w), ("batch", "lru"), "float32", "zeros"),
+                        pdef((batch, c.conv_width - 1, w), ("batch", None, "lru"), dt, "zeros"))
+            return (pdef((batch, W, g, e), ("batch", None, "kv_heads", "head_dim"), dt, "zeros"),
+                    pdef((batch, W, g, e), ("batch", None, "kv_heads", "head_dim"), dt, "zeros"))
+
+        defs: dict[str, Any] = {}
+        if self.n_macro:
+            macro = {f"b{i}": mix_cache(t) for i, t in enumerate(c.block_pattern)}
+            defs["macros"] = stack_defs(macro, self.n_macro)
+        for j in range(self.n_tail):
+            defs[f"tail{j}"] = mix_cache(c.block_pattern[j])
+        defs["cur_len"] = pdef((), (), "int32", "zeros")
+        return defs
+
+    # ------------------------------------------------------------------
+    def _run(self, params, x, positions, *, mode, cache=None, cur_len=None):
+        c = self.cfg
+        new_cache: dict[str, Any] = {}
+        if self.n_macro:
+            if mode == "train":
+                def inner(p, xc):
+                    # pin the saved value's sharding, then name it (see
+                    # transformer._block for the ordering rationale)
+                    xc = self._constrain(xc, "batch", "seq_ckpt", "embed")
+                    xc = checkpoint_name(xc, "layer_in")
+                    y, _ = self._macro(p, xc, positions, mode=mode)
+                    return self._constrain(y, "batch", "seq_ckpt", "embed")
+
+                if c.remat_policy == "names":
+                    inner = jax.checkpoint(
+                        inner,
+                        policy=jax.checkpoint_policies.save_only_these_names("layer_in"))
+                elif c.remat_policy != "none":
+                    inner = jax.checkpoint(inner)
+
+                def body(xc, p):
+                    return inner(p, xc), None
+                x, _ = jax.lax.scan(body, x, params["macros"])
+            elif mode == "prefill":
+                def body(xc, p):
+                    y, ncch = self._macro(p, xc, positions, mode=mode)
+                    return y, ncch
+                x, ncc = jax.lax.scan(body, x, params["macros"])
+                new_cache["macros"] = ncc
+            else:
+                def body(xc, xs):
+                    p, cch = xs
+                    y, ncch = self._macro(p, xc, positions, mode=mode,
+                                          caches=cch, cur_len=cur_len)
+                    return y, ncch
+                x, ncc = jax.lax.scan(body, x, (params["macros"], cache["macros"]))
+                new_cache["macros"] = ncc
+        for j in range(self.n_tail):
+            t = c.block_pattern[j]
+            cch = cache[f"tail{j}"] if cache is not None else None
+            x, ncch = self._block(params[f"tail{j}"], x, positions, t,
+                                  mode=mode, cache=cch, cur_len=cur_len)
+            if mode in ("prefill", "decode"):
+                new_cache[f"tail{j}"] = ncch
+        return x, new_cache
+
+    def loss(self, params, batch):
+        c = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        positions = jnp.arange(x.shape[1])[None]
+        x, _ = self._run(params, x, positions, mode="train")
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = softmax_xent_chunked(h, params["lm_head"], labels, mask)
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    def prefill(self, params, batch):
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        positions = jnp.arange(x.shape[1])[None]
+        x, caches = self._run(params, x, positions, mode="prefill")
+        h = rms_norm(x[:, -1:], params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])[:, 0]
+        caches["cur_len"] = jnp.int32(tokens.shape[1])
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens):
+        c = self.cfg
+        cur = cache["cur_len"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        positions = jnp.full((1, 1), cur, jnp.int32)
+        x, new_cache = self._run(params, x, positions, mode="decode",
+                                 cache=cache, cur_len=cur)
+        new_cache["cur_len"] = cur + 1
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])[:, 0]
+        return logits, new_cache

@@ -1,0 +1,488 @@
+"""TransformerLM: dense / MoE / VLM / audio decoder architectures.
+
+One composable implementation covers deepseek-7b, yi-6b/34b, qwen3-8b
+(qk-norm), deepseek-v3 (MLA + MoE + MTP), dbrx (MoE), pixtral (VLM backbone,
+stub ViT frontend) and musicgen (audio backbone, stub EnCodec frontend).
+
+Structure: pre-norm blocks, scan-over-layers with stacked params (compile
+time independent of depth), chunked-vocab CE loss, KV-cache prefill/decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.common import dtype_of
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import embedding as embed_lib
+from repro.models.layers import apply_rope, rms_norm, softmax_xent_chunked, swiglu
+from repro.models.moe import moe_ffn
+from repro.models.params import ParamDef, pdef, stack_defs
+
+VIT_DIM = 1024  # pixtral ViT stub output width
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "names":
+        # save ONLY the (sequence-sharded, bf16) per-layer input; recompute
+        # everything else in backward. See DESIGN.md §4 memory plan.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names("layer_in"))
+    return jax.checkpoint(fn)  # full
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, mesh=None, rules=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.adt = dtype_of(cfg.activation_dtype)
+
+    # ------------------------------------------------------------------
+    # Parameter definitions
+    # ------------------------------------------------------------------
+    def _attn_defs(self) -> dict[str, ParamDef]:
+        c = self.cfg
+        d, h, g, e = c.d_model, c.num_heads, c.num_kv_heads, c.resolved_head_dim
+        pd = c.param_dtype
+        if c.use_mla:
+            dn, dr, dv = c.qk_nope_head_dim, c.qk_rope_head_dim, c.v_head_dim
+            out = {
+                "norm": pdef((d,), ("embed",), pd, "ones"),
+                "q_a": pdef((d, c.q_lora_rank), ("fsdp", "q_lora"), pd),
+                "q_norm": pdef((c.q_lora_rank,), ("q_lora",), pd, "ones"),
+                "q_b": pdef((c.q_lora_rank, h, dn + dr), ("q_lora", "heads", None), pd),
+                "kv_a": pdef((d, c.kv_lora_rank + dr), ("fsdp", None), pd),
+                "kv_norm": pdef((c.kv_lora_rank,), ("kv_lora",), pd, "ones"),
+                "kv_b_k": pdef((c.kv_lora_rank, h, dn), ("kv_lora", "heads", None), pd),
+                "kv_b_v": pdef((c.kv_lora_rank, h, dv), ("kv_lora", "heads", None), pd),
+                "wo": pdef((h, dv, d), ("heads", None, "fsdp"), pd),
+            }
+            return out
+        out = {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "wq": pdef((d, h, e), ("fsdp", "heads", "head_dim"), pd),
+            "wk": pdef((d, g, e), ("fsdp", "kv_heads", "head_dim"), pd),
+            "wv": pdef((d, g, e), ("fsdp", "kv_heads", "head_dim"), pd),
+            "wo": pdef((h, e, d), ("heads", "head_dim", "fsdp"), pd),
+        }
+        if c.qk_norm:
+            out["qn"] = pdef((e,), ("head_dim",), pd, "ones")
+            out["kn"] = pdef((e,), ("head_dim",), pd, "ones")
+        return out
+
+    def _mlp_defs(self, d_ff: int) -> dict[str, ParamDef]:
+        c = self.cfg
+        d, pd = c.d_model, c.param_dtype
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "w_gate": pdef((d, d_ff), ("fsdp", "mlp"), pd),
+            "w_up": pdef((d, d_ff), ("fsdp", "mlp"), pd),
+            "w_down": pdef((d_ff, d), ("mlp", "fsdp"), pd),
+        }
+
+    def _moe_defs(self) -> dict[str, ParamDef]:
+        c = self.cfg
+        d, pd = c.d_model, c.param_dtype
+        e, f = c.num_experts, c.moe_d_ff
+        out = {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "router": pdef((d, e), ("embed", "experts"), "float32"),
+            # f carries "mlp": when EP only covers part of the mesh (dbrx:
+            # 16 experts -> data axis), d_ff TP-shards over the rest — expert
+            # weights end up fully sharded, zero FSDP gathers
+            "w_gate": pdef((e, d, f), ("experts", "fsdp", "mlp"), pd),
+            "w_up": pdef((e, d, f), ("experts", "fsdp", "mlp"), pd),
+            "w_down": pdef((e, f, d), ("experts", "mlp", "fsdp"), pd),
+        }
+        if c.num_shared_experts:
+            fs = f * c.num_shared_experts
+            out["shared_w_gate"] = pdef((d, fs), ("fsdp", "mlp"), pd)
+            out["shared_w_up"] = pdef((d, fs), ("fsdp", "mlp"), pd)
+            out["shared_w_down"] = pdef((fs, d), ("mlp", "fsdp"), pd)
+        return out
+
+    def _block_defs(self, moe: bool) -> dict[str, Any]:
+        mix = self._moe_defs() if moe else self._mlp_defs(self.cfg.dense_d_ff or self.cfg.d_ff)
+        return {"attn": self._attn_defs(), "mlp": mix}
+
+    def param_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, v, pd = c.d_model, c.vocab_size, c.param_dtype
+        defs: dict[str, Any] = {}
+        if c.family == "audio":
+            defs["embed"] = pdef((c.num_codebooks, v, d), ("stack", "vocab", "fsdp"), pd)
+        else:
+            defs["embed"] = pdef((v, d), ("vocab", "fsdp"), pd)
+        if c.family == "vlm":
+            defs["patch_proj"] = pdef((VIT_DIM, d), ("embed", "fsdp"), pd)
+        n_dense = c.first_dense_layers if c.num_experts else c.num_layers
+        n_moe = c.num_layers - n_dense if c.num_experts else 0
+        if n_dense:
+            defs["dense_layers"] = stack_defs(self._block_defs(False), n_dense)
+        if n_moe:
+            defs["moe_layers"] = stack_defs(self._block_defs(True), n_moe)
+        defs["final_norm"] = pdef((d,), ("embed",), pd, "ones")
+        if c.family == "audio":
+            defs["lm_head"] = pdef((c.num_codebooks, d, v), ("stack", "embed", "vocab"), pd)
+        elif not c.tie_embeddings:
+            defs["lm_head"] = pdef((d, v), ("embed", "vocab"), pd)
+        if c.mtp_depth:
+            defs["mtp"] = {
+                "norm1": pdef((d,), ("embed",), pd, "ones"),
+                "norm2": pdef((d,), ("embed",), pd, "ones"),
+                "proj": pdef((2 * d, d), ("fsdp", "embed"), pd),
+                "block": self._block_defs(bool(c.num_experts)),
+            }
+        return defs
+
+    # ------------------------------------------------------------------
+    # Blocks
+    # ------------------------------------------------------------------
+    def _constrain(self, x, *axes):
+        if self.rules is not None and self.mesh is not None:
+            x = jax.lax.with_sharding_constraint(x, self.rules.sharding(*axes))
+        return x
+
+    def _gqa_attention(self, p, x, positions, *, mode, cache=None, cur_len=None):
+        c = self.cfg
+        eps = c.norm_eps
+        xs = rms_norm(x, p["norm"], eps)
+        q = jnp.einsum("bsd,dhe->bshe", xs, p["wq"])
+        k = jnp.einsum("bsd,dge->bsge", xs, p["wk"])
+        v = jnp.einsum("bsd,dge->bsge", xs, p["wv"])
+        if c.qk_norm:
+            q = rms_norm(q, p["qn"], eps)
+            k = rms_norm(k, p["kn"], eps)
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        q = self._constrain(q, "batch", "seq", "heads", "head_dim")
+        k = self._constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        if mode == "decode":
+            kc, vc = cache  # (b, S, g, e) — possibly quantized (fp8)
+            cdt = dtype_of(c.kv_cache_dtype)
+            S = kc.shape[1]
+            if c.window_size and S == c.window_size:
+                idx = cur_len % c.window_size  # rotating window cache
+            else:
+                idx = jnp.minimum(cur_len, S - 1)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(cdt), idx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(cdt), idx, axis=1)
+            o = attn_lib.decode_attention(q, kc.astype(self.adt),
+                                          vc.astype(self.adt), cur_len + 1,
+                                          window=c.window_size)
+            new_cache = (kc, vc)
+        else:
+            o = attn_lib.attention(
+                q, k, v, impl=c.attention_impl, causal=True,
+                window=c.window_size, block_q=c.attn_block_q,
+                block_kv=c.attn_block_kv)
+            new_cache = (k, v) if mode == "prefill" else None
+        out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+        return x + out, new_cache
+
+    def _mla_attention(self, p, x, positions, *, mode, cache=None, cur_len=None):
+        c = self.cfg
+        eps = c.norm_eps
+        dn, dr, dv = c.qk_nope_head_dim, c.qk_rope_head_dim, c.v_head_dim
+        h = c.num_heads
+        xs = rms_norm(x, p["norm"], eps)
+        cq = rms_norm(jnp.einsum("bsd,dq->bsq", xs, p["q_a"]), p["q_norm"], eps)
+        q = jnp.einsum("bsq,qhe->bshe", cq, p["q_b"])
+        q_nope, q_pe = q[..., :dn], q[..., dn:]
+        q_pe = apply_rope(q_pe, positions, c.rope_theta)
+        kv = jnp.einsum("bsd,dk->bsk", xs, p["kv_a"])
+        ckv, k_pe = kv[..., :c.kv_lora_rank], kv[..., c.kv_lora_rank:]
+        ckv = rms_norm(ckv, p["kv_norm"], eps)
+        k_pe = apply_rope(k_pe[:, :, None, :], positions, c.rope_theta)[:, :, 0]
+        scale = (dn + dr) ** -0.5
+        if mode == "decode":
+            ckv_c, kpe_c = cache  # (b, S, c), (b, S, dr) — possibly fp8
+            cdt = dtype_of(c.kv_cache_dtype)
+            S = ckv_c.shape[1]
+            idx = jnp.minimum(cur_len, S - 1)
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, ckv.astype(cdt), idx, axis=1)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(kpe_c, k_pe.astype(cdt), idx, axis=1)
+            o = attn_lib.mla_absorbed_decode(
+                q_nope[:, 0], q_pe[:, 0], ckv_c.astype(self.adt),
+                kpe_c.astype(self.adt),
+                p["kv_b_k"], p["kv_b_v"], cur_len + 1, scale=scale)
+            o = o[:, None]  # (b, 1, h, dv)
+            new_cache = (ckv_c, kpe_c)
+        else:
+            qq = jnp.concatenate([q_nope, q_pe], -1)
+            qq = self._constrain(qq, "batch", "seq", "heads", None)
+            if c.attention_impl == "naive":
+                kvup = jnp.einsum("bsk,khe->bshe",
+                                  ckv, jnp.concatenate([p["kv_b_k"], p["kv_b_v"]], -1))
+                k_nope, v = kvup[..., :dn], kvup[..., dn:]
+                k = jnp.concatenate(
+                    [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], q_pe.shape)], -1)
+                o = attn_lib.attention(qq, k, v, impl="naive", causal=True,
+                                       scale=scale)
+            else:
+                # latent-blockwise: never materializes full per-head K/V
+                o = attn_lib.mla_prefill_attention(
+                    qq, ckv, k_pe, p["kv_b_k"], p["kv_b_v"], scale=scale,
+                    block_q=c.attn_block_q, block_kv=c.attn_block_kv)
+            new_cache = (ckv, k_pe) if mode == "prefill" else None
+        out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+        return x + out, new_cache
+
+    def _mix(self, p, x, positions, *, mode, cache=None, cur_len=None):
+        if self.cfg.use_mla:
+            return self._mla_attention(p, x, positions, mode=mode, cache=cache,
+                                       cur_len=cur_len)
+        return self._gqa_attention(p, x, positions, mode=mode, cache=cache,
+                                   cur_len=cur_len)
+
+    def _ffn(self, p, x, moe: bool):
+        c = self.cfg
+        xs = rms_norm(x, p["norm"], c.norm_eps)
+        if moe:
+            b, s, d = xs.shape
+            y, aux, dropped = moe_ffn(xs.reshape(b * s, d), p, top_k=c.top_k,
+                                      num_experts=c.num_experts,
+                                      capacity_factor=c.capacity_factor,
+                                      constrain=self._constrain)
+            return x + y.reshape(b, s, d), aux
+        return x + swiglu(xs, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0)
+
+    def _block(self, p, x, positions, moe: bool, *, mode, cache=None, cur_len=None):
+        if mode == "train":
+            # Megatron-style sequence parallelism for the activation residual:
+            # the layer-scan carry (== the only cross-layer saved activation
+            # under full remat) stays sharded (batch x model-on-seq); each
+            # layer gathers it, computes, and re-scatters its output.
+            # Saved-activation HBM drops by the TP degree for an extra
+            # per-layer all-gather (memory <-> collective trade, quantified
+            # in EXPERIMENTS.md §Perf).
+            x = checkpoint_name(x, "layer_in")
+        x = self._constrain(x, "batch", "seq", "embed")
+        x, new_cache = self._mix(p["attn"], x, positions, mode=mode,
+                                 cache=cache, cur_len=cur_len)
+        x, aux = self._ffn(p["mlp"], x, moe)
+        if mode == "train":
+            x = self._constrain(x, "batch", "seq_ckpt", "embed")
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # Embedding / head
+    # ------------------------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        c = self.cfg
+        if c.family == "audio":
+            # tokens: (b, s, K) — sum of per-codebook embeddings
+            parts = [embed_lib.embed(params["embed"][k], tokens[..., k],
+                                     c.embedding_impl, self.mesh, self.rules)
+                     for k in range(c.num_codebooks)]
+            return functools.reduce(jnp.add, parts).astype(self.adt)
+        return embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                               self.mesh, self.rules).astype(self.adt)
+
+    def _head_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------
+    # Forward passes
+    # ------------------------------------------------------------------
+    def _stack(self, params, x, positions, *, mode, cache=None, cur_len=None):
+        """Run all blocks; returns (x, new_caches, aux_sum)."""
+        c = self.cfg
+        aux_total = jnp.float32(0)
+        new_caches: dict[str, Any] = {}
+
+        for group, moe in (("dense_layers", False), ("moe_layers", True)):
+            if group not in params:
+                continue
+            stacked = params[group]
+
+            def body(carry, xs, moe=moe):
+                x, aux = carry
+                if mode == "train":
+                    p = xs
+                    blk = _remat(functools.partial(self._block, moe=moe, mode=mode),
+                                 c.remat_policy)
+                    x, _, a = blk(p, x, positions)
+                    return (x, aux + a), None
+                p, cch = xs
+                x, ncch, a = self._block(p, x, positions, moe, mode=mode,
+                                         cache=cch, cur_len=cur_len)
+                return (x, aux + a), ncch
+
+            if not c.scan_layers and mode == "train":
+                # unrolled: exact XLA cost analysis (calibration mode)
+                n = jax.tree.leaves(stacked)[0].shape[0]
+                for i in range(n):
+                    p_i = jax.tree.map(lambda t: t[i], stacked)
+                    (x, aux_total), _ = body((x, aux_total), p_i)
+            elif mode == "train":
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+            else:
+                (x, aux_total), ncc = jax.lax.scan(
+                    body, (x, aux_total), (stacked, cache[group]))
+                new_caches[group] = ncc
+        return x, new_caches, aux_total
+
+    def loss(self, params, batch):
+        """batch: tokens (b, s[, K]), labels (b, s[, K]), optional patch_embeds."""
+        c = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = self._embed_tokens(params, tokens)
+        n_prefix = 0
+        if c.family == "vlm":
+            patches = jnp.einsum("bpv,vd->bpd",
+                                 batch["patch_embeds"].astype(self.adt),
+                                 params["patch_proj"]).astype(self.adt)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        positions = jnp.arange(x.shape[1])[None]
+        x = self._constrain(x, "batch", "seq_ckpt", "embed")
+        x, _, aux = self._stack(params, x, positions, mode="train")
+        x = self._constrain(x, "batch", "seq", "embed")
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        mask = (labels >= 0).astype(jnp.float32)
+        if c.family == "audio":
+            head = params["lm_head"]  # (K, d, v)
+            tot = jnp.float32(0)
+            for k in range(c.num_codebooks):
+                tot = tot + softmax_xent_chunked(h, head[k], labels[..., k],
+                                                 mask[..., k])
+            ce = tot / c.num_codebooks
+        else:
+            ce = softmax_xent_chunked(h, self._head_w(params), labels, mask)
+        metrics = {"ce": ce, "aux": aux}
+        loss = ce + c.router_aux_weight * aux
+        if c.mtp_depth:
+            mtp_ce = self._mtp_loss(params, x, tokens, labels)
+            metrics["mtp_ce"] = mtp_ce
+            loss = loss + 0.1 * mtp_ce
+        return loss, metrics
+
+    def _mtp_loss(self, params, hidden, tokens, labels):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from the
+        main trunk's h_t fused with the embedding of token t+1."""
+        c = self.cfg
+        p = params["mtp"]
+        h = rms_norm(hidden[:, :-1], p["norm1"], c.norm_eps)
+        e = rms_norm(self._embed_tokens(params, tokens[:, 1:]), p["norm2"], c.norm_eps)
+        x = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h, e], -1), p["proj"])
+        positions = jnp.arange(x.shape[1])[None]
+        x, _, _ = self._block(p["block"], x, positions,
+                              moe=bool(c.num_experts), mode="train")
+        hh = rms_norm(x, params["final_norm"], c.norm_eps)
+        lab = labels[:, 1:]  # labels are already t+1 targets; shift once more
+        mask = (lab >= 0).astype(jnp.float32)
+        return softmax_xent_chunked(hh, self._head_w(params), lab, mask)
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def cache_defs(self, batch: int, seq_len: int) -> dict[str, Any]:
+        c = self.cfg
+        dt = c.kv_cache_dtype
+        S = min(seq_len, c.window_size) if (c.window_size and c.window_size < seq_len) else seq_len
+        if c.use_mla:
+            # latent cache: shard the sequence dim over `model` (no head dim
+            # exists to split); softmax/psum handles the sharded reduction
+            per = (pdef((batch, S, c.kv_lora_rank), ("batch", "seq_kv", "kv_lora"), dt, "zeros"),
+                   pdef((batch, S, c.qk_rope_head_dim), ("batch", "seq_kv", "rope"), dt, "zeros"))
+        else:
+            g, e = c.num_kv_heads, c.resolved_head_dim
+            per = (pdef((batch, S, g, e), ("batch", None, "kv_heads", "head_dim"), dt, "zeros"),
+                   pdef((batch, S, g, e), ("batch", None, "kv_heads", "head_dim"), dt, "zeros"))
+        defs: dict[str, Any] = {}
+        n_dense = c.first_dense_layers if c.num_experts else c.num_layers
+        n_moe = c.num_layers - n_dense if c.num_experts else 0
+        if n_dense:
+            defs["dense_layers"] = stack_defs(per, n_dense)
+        if n_moe:
+            defs["moe_layers"] = stack_defs(per, n_moe)
+        defs["cur_len"] = pdef((), (), "int32", "zeros")
+        return defs
+
+    def prefill(self, params, batch, margin: int = 64):
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        n_prefix = 0
+        if c.family == "vlm":
+            patches = jnp.einsum("bpv,vd->bpd",
+                                 batch["patch_embeds"].astype(self.adt),
+                                 params["patch_proj"]).astype(self.adt)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        positions = jnp.arange(x.shape[1])[None]
+        # run blocks in prefill mode, capturing caches via scan ys
+        seq = x.shape[1]
+        caches: dict[str, Any] = {}
+        aux = jnp.float32(0)
+
+        for group, moe in (("dense_layers", False), ("moe_layers", True)):
+            if group not in params:
+                continue
+
+            def body(carry, p, moe=moe):
+                x, aux = carry
+                x, cch, a = self._block(p, x, positions, moe, mode="prefill")
+                return (x, aux + a), cch
+
+            (x, aux), cch = jax.lax.scan(body, (x, aux), params[group])
+            if c.window_size and c.window_size < seq:
+                cch = tuple(z[:, :, -c.window_size:] for z in cch)
+            elif margin:
+                # decode headroom: without it the first generated token's kv
+                # would overwrite the last prompt position
+                cch = tuple(jnp.pad(z, ((0, 0), (0, 0), (0, margin))
+                                    + ((0, 0),) * (z.ndim - 3)) for z in cch)
+            cdt = dtype_of(c.kv_cache_dtype)
+            caches[group] = tuple(z.astype(cdt) for z in cch)
+        h = rms_norm(x[:, -1:], params["final_norm"], c.norm_eps)
+        logits = self._last_logits(params, h)
+        caches["cur_len"] = jnp.int32(seq)
+        return logits, caches
+
+    def _last_logits(self, params, h):
+        c = self.cfg
+        if c.family == "audio":
+            return jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])[:, 0]
+        return jnp.einsum("bsd,dv->bsv", h, self._head_w(params))[:, 0]
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (b, 1[, K]) — one new token given an existing cache."""
+        c = self.cfg
+        cur = cache["cur_len"]
+        x = self._embed_tokens(params, tokens)
+        positions = jnp.full((1, 1), cur, jnp.int32)
+        new_cache: dict[str, Any] = {"cur_len": cur + 1}
+        x = self._constrain(x, "batch", "seq", "embed")
+        for group, moe in (("dense_layers", False), ("moe_layers", True)):
+            if group not in params:
+                continue
+
+            def body(carry, xs, moe=moe):
+                x = carry
+                p, cch = xs
+                x, ncch, _ = self._block(p, x, positions, moe, mode="decode",
+                                         cache=cch, cur_len=cur)
+                return x, ncch
+
+            x, ncc = jax.lax.scan(body, x, (params[group], cache[group]))
+            new_cache[group] = ncc
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = self._last_logits(params, h)
+        return logits, new_cache

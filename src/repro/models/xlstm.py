@@ -1,0 +1,327 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory).
+
+mLSTM is computed *chunkwise*: within a chunk the stabilized quadratic form,
+across chunks a recurrent matrix state (C, n, m) — O(s * d^2) work, which is
+what makes the `long_500k` cell runnable (sub-quadratic in sequence length).
+sLSTM keeps the paper's sequential exponential-gated recurrence via
+`lax.scan` over time with block-diagonal per-head recurrent weights.
+
+Decode is O(1) per token for both cell types (the SSM selling point the
+roofline table surfaces against the full-attention archs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of
+from repro.configs.base import ModelConfig
+from repro.models import embedding as embed_lib
+from repro.models.layers import causal_conv1d, geglu, rms_norm, softmax_xent_chunked
+from repro.models.params import pdef
+
+CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise-parallel form with exponential-gating stabilization
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk=CHUNK):
+    """q, k, v: (b, s, h, e) fp32; log_i/log_f: (b, s, h) fp32.
+
+    Returns (out (b, s, h, e), (C, n, m)) where the state stores
+    true_C = C * exp(m) (stabilized), C: (b, h, e, e), n: (b, h, e), m: (b, h).
+    """
+    b, s, h, e = q.shape
+    scale = e ** -0.5
+    q = q * scale
+    if s % chunk:
+        pad = chunk - s % chunk
+        q, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) for x in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    nc = q.shape[1] // L
+
+    def to_chunks(x):
+        return x.reshape((b, nc, L) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, log_i, log_f))
+
+    if state is None:
+        C0 = jnp.zeros((b, h, e, e), jnp.float32)
+        n0 = jnp.zeros((b, h, e), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, li, lf = xs  # (b, L, h, e) / (b, L, h)
+        lc = jnp.cumsum(lf, axis=1)                      # inclusive decay to t
+        F = lc[:, -1]                                    # (b, h) total decay
+        # intra-chunk log weights D[t, s] = lc_t - lc_s + li_s  (s <= t)
+        D = lc[:, :, None, :] - lc[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], D, -1e30)   # (b, t, s, h)
+        b_inter = lc + m[:, None, :]                     # (b, t, h)
+        m_t = jnp.maximum(jnp.max(D, axis=2), b_inter)   # (b, t, h)
+        w_intra = jnp.exp(D - m_t[:, :, None, :])        # (b, t, s, h)
+        w_inter = jnp.exp(b_inter - m_t)                 # (b, t, h)
+        scores = jnp.einsum("bthe,bshe->btsh", qj, kj) * w_intra
+        num = jnp.einsum("btsh,bshe->bthe", scores, vj)
+        num = num + jnp.einsum("bthe,bhef->bthf", qj, C) * w_inter[..., None]
+        den = jnp.sum(scores, axis=2)                    # (b, t, h)
+        den = den + jnp.einsum("bthe,bhe->bth", qj, n) * w_inter
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to end of chunk ----
+        key_decay = F[:, None, :] - lc + li              # (b, s, h)
+        m_new = jnp.maximum(F + m, jnp.max(key_decay, axis=1))
+        kw = jnp.exp(key_decay - m_new[:, None, :])      # (b, s, h)
+        carry_w = jnp.exp(F + m - m_new)                 # (b, h)
+        C_new = C * carry_w[..., None, None] + jnp.einsum(
+            "bshe,bshf,bsh->bhef", kj, vj, kw)
+        n_new = n * carry_w[..., None] + jnp.einsum("bshe,bsh->bhe", kj, kw)
+        return (C_new, n_new, m_new), out
+
+    (C, n, m), outs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    out = outs.swapaxes(0, 1).reshape(b, nc * L, h, e)[:, :s]
+    return out, (C, n, m)
+
+
+def mlstm_decode(q, k, v, log_i, log_f, state):
+    """Single-step recurrent mLSTM. q,k,v: (b, h, e); log_i/f: (b, h)."""
+    C, n, m = state
+    e = q.shape[-1]
+    q = q * e ** -0.5
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_w = jnp.exp(log_i - m_new)
+    f_w = jnp.exp(log_f + m - m_new)
+    C = C * f_w[..., None, None] + jnp.einsum("bhe,bhf,bh->bhef", k, v, i_w)
+    n = n * f_w[..., None] + k * i_w[..., None]
+    num = jnp.einsum("bhe,bhef->bhf", q, C)
+    den = jnp.einsum("bhe,bhe->bh", q, n)
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return out, (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — sequential exponential-gated scalar memory
+# ---------------------------------------------------------------------------
+
+def slstm_step(x_t, h_prev, c_prev, n_prev, m_prev, p):
+    """x_t: (b, h, e) gate pre-activations from input side live in p already
+    combined; here x_t are the four stacked pre-acts (b, 4, h, e)."""
+    rec = jnp.einsum("bhe,ghef->bghf", h_prev, p["R"])   # (b, 4, h, e)
+    z_t = x_t + rec
+    i_t, f_t, z_in, o_in = z_t[:, 0], z_t[:, 1], z_t[:, 2], z_t[:, 3]
+    m_new = jnp.maximum(f_t + m_prev, i_t)
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(f_t + m_prev - m_new)
+    c = f * c_prev + i * jnp.tanh(z_in)
+    n = f * n_prev + i
+    h = jax.nn.sigmoid(o_in) * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def slstm_seq(x_gates, p, state=None):
+    """x_gates: (b, s, 4, h, e) fp32. Sequential scan over time."""
+    b, s, _, h, e = x_gates.shape
+    if state is None:
+        z = jnp.zeros((b, h, e), jnp.float32)
+        state = (z, z, z, jnp.full((b, h, e), -1e30, jnp.float32))
+
+    def body(carry, x_t):
+        h_p, c_p, n_p, m_p = carry
+        h_n, c_n, n_n, m_n = slstm_step(x_t, h_p, c_p, n_p, m_p, p)
+        return (h_n, c_n, n_n, m_n), h_n
+
+    state, hs = jax.lax.scan(body, state, x_gates.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state  # (b, s, h, e), state
+
+
+# ---------------------------------------------------------------------------
+# Blocks + model
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig, mesh=None, rules=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.adt = dtype_of(cfg.activation_dtype)
+        self.inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        self.heads = cfg.num_heads
+        self.he_m = self.inner // self.heads   # mLSTM head dim
+        self.he_s = cfg.d_model // self.heads  # sLSTM head dim
+
+    def _mlstm_defs(self) -> dict[str, Any]:
+        c, d, inner, h, e = self.cfg, self.cfg.d_model, self.inner, self.heads, self.he_m
+        pd = c.param_dtype
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "w_up": pdef((d, 2 * inner), ("fsdp", "inner"), pd),
+            "conv": pdef((c.conv_width, inner), (None, "inner"), pd, "normal", 0.1),
+            "wq": pdef((inner, h, e), ("inner", "heads", None), pd),
+            "wk": pdef((inner, h, e), ("inner", "heads", None), pd),
+            "wv": pdef((inner, h, e), ("inner", "heads", None), pd),
+            "w_if": pdef((inner, 2 * h), ("inner", None), "float32", "zeros"),
+            "b_i": pdef((h,), ("heads",), "float32", "zeros"),
+            "b_f": pdef((h,), ("heads",), "float32", "ones"),
+            "gn": pdef((inner,), ("inner",), pd, "ones"),
+            "w_down": pdef((inner, d), ("inner", "fsdp"), pd),
+        }
+
+    def _slstm_defs(self) -> dict[str, Any]:
+        c, d, h, e = self.cfg, self.cfg.d_model, self.heads, self.he_s
+        pd = c.param_dtype
+        f = int(d * c.slstm_proj_factor)
+        return {
+            "norm": pdef((d,), ("embed",), pd, "ones"),
+            "W": pdef((d, 4, h, e), ("fsdp", None, "heads", None), "float32", "normal", 0.02),
+            "R": pdef((4, h, e, e), (None, "heads", None, None), "float32", "normal", 0.02),
+            "b": pdef((4, h, e), (None, "heads", None), "float32", "zeros"),
+            "gn": pdef((d,), ("embed",), pd, "ones"),
+            "ffn_norm": pdef((d,), ("embed",), pd, "ones"),
+            "w_gate": pdef((d, f), ("fsdp", "mlp"), pd),
+            "w_up": pdef((d, f), ("fsdp", "mlp"), pd),
+            "w_down": pdef((f, d), ("mlp", "fsdp"), pd),
+        }
+
+    def param_defs(self) -> dict[str, Any]:
+        c = self.cfg
+        d, v, pd = c.d_model, c.vocab_size, c.param_dtype
+        defs: dict[str, Any] = {"embed": pdef((v, d), ("vocab", "fsdp"), pd)}
+        for i in range(c.num_layers):
+            if i in c.slstm_at:
+                defs[f"layer{i}"] = self._slstm_defs()
+            else:
+                defs[f"layer{i}"] = self._mlstm_defs()
+        defs["final_norm"] = pdef((d,), ("embed",), pd, "ones")
+        if not c.tie_embeddings:
+            defs["lm_head"] = pdef((d, v), ("embed", "vocab"), pd)
+        return defs
+
+    # ------------------------------------------------------------------
+    def _mlstm_block(self, p, x, *, mode, cache=None):
+        c = self.cfg
+        b, s, d = x.shape
+        h, e = self.heads, self.he_m
+        xs = rms_norm(x, p["norm"], c.norm_eps)
+        up = jnp.einsum("bsd,di->bsi", xs, p["w_up"])
+        xm, z = jnp.split(up, 2, axis=-1)
+        conv_state = cache[3] if cache is not None else None
+        xc, new_conv = causal_conv1d(xm, p["conv"], conv_state)
+        xc = jax.nn.silu(xc)
+        q = jnp.einsum("bsi,ihe->bshe", xc, p["wq"]).astype(jnp.float32)
+        k = jnp.einsum("bsi,ihe->bshe", xc, p["wk"]).astype(jnp.float32)
+        v = jnp.einsum("bsi,ihe->bshe", xm, p["wv"]).astype(jnp.float32)
+        gif = jnp.einsum("bsi,ig->bsg", xc.astype(jnp.float32), p["w_if"])
+        log_i = gif[..., :h] + p["b_i"]
+        log_f = jax.nn.log_sigmoid(gif[..., h:] + p["b_f"])
+        if mode == "decode":
+            state = cache[:3]
+            out, new_state = mlstm_decode(q[:, 0], k[:, 0], v[:, 0],
+                                          log_i[:, 0], log_f[:, 0], state)
+            out = out[:, None]
+            new_cache = new_state + (new_conv,)
+        else:
+            state = cache[:3] if cache is not None else None
+            out, new_state = mlstm_chunkwise(q, k, v, log_i, log_f, state)
+            new_cache = new_state + (new_conv,) if mode == "prefill" else None
+        out = out.reshape(b, s, self.inner).astype(x.dtype)
+        out = rms_norm(out, p["gn"], c.norm_eps)  # group-norm stand-in
+        out = out * jax.nn.silu(z)
+        return x + jnp.einsum("bsi,id->bsd", out, p["w_down"]), new_cache
+
+    def _slstm_block(self, p, x, *, mode, cache=None):
+        c = self.cfg
+        xs = rms_norm(x, p["norm"], c.norm_eps).astype(jnp.float32)
+        gates = jnp.einsum("bsd,dghe->bsghe", xs, p["W"]) + p["b"]
+        if mode == "decode":
+            h_p, c_p, n_p, m_p = cache
+            h_n, c_n, n_n, m_n = slstm_step(gates[:, 0], h_p, c_p, n_p, m_p, p)
+            hs = h_n[:, None]
+            new_cache = (h_n, c_n, n_n, m_n)
+        else:
+            hs, state = slstm_seq(gates, p, cache)
+            new_cache = state if mode == "prefill" else None
+        b, s = x.shape[:2]
+        out = hs.reshape(b, s, c.d_model).astype(x.dtype)
+        out = rms_norm(out, p["gn"], c.norm_eps)
+        x = x + out
+        xf = rms_norm(x, p["ffn_norm"], c.norm_eps)
+        return x + geglu(xf, p["w_gate"], p["w_up"], p["w_down"]), new_cache
+
+    def cache_defs(self, batch: int, seq_len: int) -> dict[str, Any]:
+        c = self.cfg
+        h, em, es = self.heads, self.he_m, self.he_s
+        defs: dict[str, Any] = {}
+        for i in range(c.num_layers):
+            if i in c.slstm_at:
+                z = pdef((batch, h, es), ("batch", "heads", None), "float32", "zeros")
+                defs[f"layer{i}"] = (z, z, z, pdef((batch, h, es), ("batch", "heads", None), "float32", "zeros"))
+            else:
+                defs[f"layer{i}"] = (
+                    pdef((batch, h, em, em), ("batch", "heads", None, None), "float32", "zeros"),
+                    pdef((batch, h, em), ("batch", "heads", None), "float32", "zeros"),
+                    pdef((batch, h), ("batch", "heads"), "float32", "zeros"),
+                    pdef((batch, c.conv_width - 1, self.inner), ("batch", None, "inner"), c.activation_dtype, "zeros"),
+                )
+        defs["cur_len"] = pdef((), (), "int32", "zeros")
+        return defs
+
+    # ------------------------------------------------------------------
+    def _run(self, params, x, *, mode, cache=None):
+        c = self.cfg
+        new_cache: dict[str, Any] = {}
+        for i in range(c.num_layers):
+            p = params[f"layer{i}"]
+            cch = cache[f"layer{i}"] if cache is not None else None
+            if i in c.slstm_at:
+                x, ncch = self._slstm_block(p, x, mode=mode, cache=cch)
+            else:
+                x, ncch = self._mlstm_block(p, x, mode=mode, cache=cch)
+            if mode in ("prefill", "decode"):
+                new_cache[f"layer{i}"] = ncch
+        return x, new_cache
+
+    def _head(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+
+    def loss(self, params, batch):
+        c = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        x, _ = self._run(params, x, mode="train")
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = softmax_xent_chunked(h, self._head(params), labels, mask)
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    def prefill(self, params, batch):
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        x, caches = self._run(params, x, mode="prefill")
+        h = rms_norm(x[:, -1:], params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, self._head(params))[:, 0]
+        caches["cur_len"] = jnp.int32(tokens.shape[1])
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens):
+        c = self.cfg
+        cur = cache["cur_len"]
+        x = embed_lib.embed(params["embed"], tokens, c.embedding_impl,
+                            self.mesh, self.rules).astype(self.adt)
+        x, new_cache = self._run(params, x, mode="decode", cache=cache)
+        new_cache["cur_len"] = cur + 1
+        h = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, self._head(params))[:, 0]
+        return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig, adamw_update, cosine_lr, global_norm, init_opt_state,
+    opt_state_defs,
+)

@@ -1,0 +1,1 @@
+from repro.sharding.rules import Rules, choose_kv_mode, make_rules, single_device_mesh  # noqa: F401

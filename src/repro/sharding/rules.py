@@ -1,0 +1,152 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP).
+
+Every parameter and activation is annotated with *logical* axis names; a
+``Rules`` object (built per mesh + model) resolves them to a
+``PartitionSpec``. This keeps model code mesh-agnostic: the same model
+lowers on 1 CPU device, a 16x16 pod, or the 2x16x16 multi-pod mesh.
+
+Axis vocabulary
+  batch      activation batch            -> (pod, data)
+  seq        sequence                    -> () (context-parallel variant: model)
+  embed      activation hidden dim       -> ()
+  heads      attention query heads       -> model
+  kv_heads   attention kv heads          -> model (or () in head_dim mode)
+  head_dim   per-head dim                -> () (or model in head_dim mode)
+  mlp        FFN hidden                  -> model
+  vocab      vocabulary                  -> model
+  experts    MoE experts (EP)            -> model
+  fsdp       parameter shard dim (ZeRO)  -> data (+pod if fsdp_pod)
+  layers     scan-stacked layer dim      -> ()
+  lru        RG-LRU width                -> model
+  inner      xLSTM inner dim             -> model
+  window     local-attention window      -> ()
+  kv_lora/q_lora/rope  MLA compressed dims -> ()
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Rules:
+    mesh: Mesh
+    fsdp: bool = True
+    fsdp_pod: bool = False       # also shard params over the pod axis
+    kv_mode: str = "kv_heads"    # kv_heads | head_dim  (see choose_kv_mode)
+    shard_batch: bool = True     # False for global_batch < data axis (long_500k)
+    seq_shard: bool = False      # context parallelism over the model axis
+    serve: bool = False          # inference: no FSDP (weights stream per step)
+    num_experts: int = 0         # EP across (data x model) when experts allow
+    dp_heavy: bool = False       # small models: no TP — batch over ALL axes
+    wide_mlp_serve: bool = False  # serve: shard d_ff over data x model
+
+    def __post_init__(self):
+        axes = self.mesh.axis_names
+        has_pod = "pod" in axes
+        has_data = "data" in axes
+        has_model = "model" in axes
+        model = ("model",) if has_model else ()
+        data = ("data",) if has_data else ()
+        pod = ("pod",) if has_pod else ()
+        if self.dp_heavy:
+            # §Perf iteration A: small models waste the interconnect on TP
+            # combines — treat the model axis as extra data parallelism
+            batch = (pod + data + model) if self.shard_batch else ()
+            model = ()
+        else:
+            batch = (pod + data) if self.shard_batch else ()
+        if self.serve:
+            fsdp = ()  # inference never gathers FSDP shards per step
+        else:
+            fsdp = (pod + data) if (self.fsdp and self.fsdp_pod) else data if self.fsdp else ()
+        # expert parallelism: spread experts over as many axes as divide the
+        # expert count — EP weights never move, only routed tokens do (the
+        # MAPSIN economy). deepseek-v3: 256 experts over 256 chips; dbrx:
+        # 16 experts over the 16-way data axis (+ d_ff TP over model).
+        ep = ()
+        for cand in (data + model, data, model):
+            n = 1
+            for a in cand:
+                n *= self.mesh.shape[a]
+            if cand and self.num_experts and self.num_experts % max(n, 1) == 0:
+                ep = cand
+                break
+        mlp = (data + model) if (self.serve and self.wide_mlp_serve) else model
+        kv_on_heads = self.kv_mode == "kv_heads"
+        self._map: dict[str | None, tuple[str, ...]] = {
+            None: (), "layers": (), "stack": (), "window": (),
+            "batch": batch,
+            "seq": model if self.seq_shard else (),
+            # remat-saved layer inputs: always sequence-sharded over `model`
+            "seq_ckpt": model,
+            "embed": (),
+            "heads": model if kv_on_heads else (),
+            "kv_heads": model if kv_on_heads else (),
+            "head_dim": () if kv_on_heads else model,
+            "mlp": mlp,
+            "vocab": model,
+            "experts": ep,
+            # MLA latent KV cache: shard the sequence dim over `model`
+            # (scores/softmax reduce over it -> psum), since the latent has
+            # no head dim to split
+            "seq_kv": model,
+            "fsdp": fsdp,
+            "lru": model,
+            "inner": model,
+            "kv_lora": (), "q_lora": (), "rope": (),
+            # MoE per-expert buffers: capacity dim shards over the DP axes
+            "capacity": batch,
+        }
+
+    def pspec(self, *axes: str | None) -> P:
+        parts = []
+        used: set[str] = set()
+        for a in axes:
+            mesh_axes = tuple(m for m in self._map[a] if m not in used)
+            used.update(mesh_axes)
+            if len(mesh_axes) == 0:
+                parts.append(None)
+            elif len(mesh_axes) == 1:
+                parts.append(mesh_axes[0])
+            else:
+                parts.append(mesh_axes)
+        return P(*parts)
+
+    def sharding(self, *axes: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*axes))
+
+
+def choose_kv_mode(num_kv_heads: int, mesh: Mesh) -> str:
+    """Shard kv heads over `model` when divisible; otherwise shard head_dim.
+
+    GQA models with few kv heads (kv=1..8) cannot split kv 16-way; sharding
+    head_dim instead keeps all chips busy at the cost of an all-reduce over
+    the contracted dim in attention (surfaced by the roofline; see §Perf).
+    """
+    if "model" not in mesh.axis_names:
+        return "kv_heads"
+    msize = mesh.shape["model"]
+    return "kv_heads" if num_kv_heads % msize == 0 else "head_dim"
+
+
+def make_rules(mesh: Mesh, cfg=None, shape=None, **overrides) -> Rules:
+    kw: dict = {}
+    if cfg is not None:
+        kw["kv_mode"] = choose_kv_mode(cfg.num_kv_heads, mesh)
+        kw["num_experts"] = cfg.num_experts
+    if shape is not None and "data" in mesh.axis_names:
+        dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+        kw["shard_batch"] = shape.global_batch >= dp
+        kw["serve"] = shape.kind != "train"
+    if cfg is not None and "pod" in mesh.axis_names:
+        # very large models: FSDP over pod axis too (memory floor)
+        kw["fsdp_pod"] = cfg.n_params() > 100e9
+    kw.update(overrides)
+    return Rules(mesh, **kw)
+
+
+def single_device_mesh() -> Mesh:
+    return Mesh([jax.devices()[0]], ("data",))

@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_lm_batch(cfg, b, s, rng):
+    """Random batch matching an arch's input contract."""
+    import jax.numpy as jnp
+    if cfg.family == "vlm":
+        st = s - cfg.num_patches
+        return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, st)), jnp.int32),
+                "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, st)), jnp.int32),
+                "patch_embeds": jnp.asarray(rng.randn(b, cfg.num_patches, 1024),
+                                            jnp.float32)}
+    if cfg.family == "audio":
+        k = cfg.num_codebooks
+        return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s, k)), jnp.int32),
+                "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s, k)), jnp.int32)}
+    return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)}

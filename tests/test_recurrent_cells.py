@@ -1,0 +1,77 @@
+"""Recurrent cell equivalences: chunkwise/parallel forms == step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recurrent import rg_lru_scan
+from repro.models.xlstm import (mlstm_chunkwise, mlstm_decode, slstm_seq,
+                                slstm_step)
+
+
+def test_rg_lru_scan_vs_sequential(rng):
+    b, s, w = 2, 37, 8
+    u = jnp.asarray(rng.randn(b, s, w), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.randn(b, s, w)), jnp.float32)
+    got = rg_lru_scan(u, log_a, None)
+    h = np.zeros((b, w), np.float32)
+    a = np.exp(np.asarray(log_a))
+    un = np.asarray(u)
+    for t in range(s):
+        h = a[:, t] * h + un[:, t]
+        np.testing.assert_allclose(np.asarray(got[:, t]), h, rtol=2e-5, atol=1e-5)
+
+
+def test_mlstm_chunkwise_vs_decode(rng):
+    """Chunkwise-parallel mLSTM must equal the token-by-token recurrence."""
+    b, s, h, e = 2, 50, 2, 8
+    q = jnp.asarray(rng.randn(b, s, h, e), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, e), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, e), jnp.float32)
+    log_i = jnp.asarray(rng.randn(b, s, h) * 0.5, jnp.float32)
+    log_f = jnp.asarray(-np.abs(rng.randn(b, s, h)) * 0.1, jnp.float32)
+    out_chunk, state_chunk = mlstm_chunkwise(q, k, v, log_i, log_f, chunk=16)
+    # sequential reference
+    C = jnp.zeros((b, h, e, e))
+    n = jnp.zeros((b, h, e))
+    m = jnp.full((b, h), -1e30)
+    outs = []
+    st = (C, n, m)
+    for t in range(s):
+        o, st = mlstm_decode(q[:, t], k[:, t], v[:, t], log_i[:, t],
+                             log_f[:, t], st)
+        outs.append(o)
+    want = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # states agree too (stabilized representation: compare C*exp(m))
+    for a_, b_ in [(state_chunk[0] * jnp.exp(state_chunk[2])[..., None, None],
+                    st[0] * jnp.exp(st[2])[..., None, None]),
+                   (state_chunk[1] * jnp.exp(state_chunk[2])[..., None],
+                    st[1] * jnp.exp(st[2])[..., None])]:
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunk_size_invariance(rng):
+    b, s, h, e = 1, 64, 2, 4
+    args = [jnp.asarray(rng.randn(b, s, h, e), jnp.float32) for _ in range(3)]
+    gates = [jnp.asarray(rng.randn(b, s, h) * 0.3, jnp.float32),
+             jnp.asarray(-np.abs(rng.randn(b, s, h)) * 0.2, jnp.float32)]
+    o1, _ = mlstm_chunkwise(*args, *gates, chunk=8)
+    o2, _ = mlstm_chunkwise(*args, *gates, chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_slstm_seq_vs_step(rng):
+    b, s, h, e = 2, 20, 2, 4
+    gates = jnp.asarray(rng.randn(b, s, 4, h, e) * 0.5, jnp.float32)
+    p = {"R": jnp.asarray(rng.randn(4, h, e, e) * 0.1, jnp.float32)}
+    hs, state = slstm_seq(gates, p)
+    z = jnp.zeros((b, h, e))
+    st = (z, z, z, jnp.full((b, h, e), -1e30))
+    for t in range(s):
+        hn, cn, nn, mn = slstm_step(gates[:, t], *st, p)
+        st = (hn, cn, nn, mn)
+        np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(hn),
+                                   rtol=2e-5, atol=2e-5)
