@@ -14,9 +14,9 @@ import numpy as np
 from repro.core.rdf import pack3
 
 
-def main(emit=print):
+def main(emit=print, sizes=((1 << 16, 1 << 10), (1 << 20, 1 << 14))):
     rng = np.random.RandomState(0)
-    for m, q in ((1 << 16, 1 << 10), (1 << 20, 1 << 14)):
+    for m, q in sizes:
         keys = jnp.asarray(np.sort(pack3(rng.randint(0, 1 << 20, m),
                                          rng.randint(0, 50, m),
                                          rng.randint(0, 1 << 20, m))))

@@ -7,9 +7,9 @@ from repro.core import build_store
 from repro.data import lubm_like, sp2b_like
 
 
-def main(emit=print):
-    for bench, gen, scales in (("lubm", lubm_like, (1, 2, 4, 8)),
-                               ("sp2b", sp2b_like, (2000, 4000, 8000))):
+def main(emit=print, lubm_scales=(1, 2, 4, 8), sp2b_scales=(2000, 4000, 8000)):
+    for bench, gen, scales in (("lubm", lubm_like, lubm_scales),
+                               ("sp2b", sp2b_like, sp2b_scales)):
         for scale in scales:
             tr, _, _ = gen(scale)
             t0 = time.perf_counter()

@@ -24,23 +24,23 @@ def _time(fn, repeats=3):
     return min(ts)
 
 
-def main(emit=print):
+def main(emit=print, lubm_scale=2, sp2b_scale=4000, cfg=CFG):
     cases = []
-    tr, _, qs = lubm_like(2)
+    tr, _, qs = lubm_like(lubm_scale)
     cases.append(("lubm_Q4", tr, qs["Q4"]))
-    tr2, _, qs2 = sp2b_like(4000)
+    tr2, _, qs2 = sp2b_like(sp2b_scale)
     cases.append(("sp2b_Q1", tr2, qs2["Q1"]))
     cases.append(("sp2b_Q2", tr2, qs2["Q2"]))
     for name, tr, pats in cases:
         store = build_store(tr, 1)
         t_mw = _time(lambda: execute_local(store, pats, "mapsin",
-                                           dataclasses.replace(CFG, multiway=True)))
+                                           dataclasses.replace(cfg, multiway=True)))
         t_2w = _time(lambda: execute_local(store, pats, "mapsin",
-                                           dataclasses.replace(CFG, multiway=False)))
+                                           dataclasses.replace(cfg, multiway=False)))
         b_mw = query_traffic(pats, "mapsin_routed",
-                             dataclasses.replace(CFG, multiway=True), 10)
+                             dataclasses.replace(cfg, multiway=True), 10)
         b_2w = query_traffic(pats, "mapsin_routed",
-                             dataclasses.replace(CFG, multiway=False), 10)
+                             dataclasses.replace(cfg, multiway=False), 10)
         emit(f"bench_multiway/{name},{t_mw*1e6:.0f},"
              f"multiway_us={t_mw*1e6:.0f};cascade_us={t_2w*1e6:.0f};"
              f"speedup={t_2w/max(t_mw,1e-9):.2f};"

@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import numpy as np
 
 from repro.core import ExecConfig, build_store, execute_local, query_traffic
@@ -23,22 +24,24 @@ SP2B_QUERIES = ["Q1", "Q2", "Q3a", "Q10"]
 
 
 def _time(fn, repeats=3):
-    fn()  # compile
+    jax.block_until_ready(jax.tree.leaves(fn()))  # compile
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
-        import jax
-        jax.block_until_ready(out.table)
+        # block on the FULL Bindings pytree — timing only .table would let
+        # valid/overflow work escape the measured region
+        jax.block_until_ready((out.table, out.valid, out.overflow))
         ts.append(time.perf_counter() - t0)
     return min(ts)
 
 
-def run(scales=(1, 2, 4), emit=print):
+def run(scales=(1, 2, 4), emit=print, lubm_queries=LUBM_QUERIES,
+        sp2b_queries=SP2B_QUERIES, repeats=3):
     rows = []
     for bench, gen, queries, qnames in (
-            ("lubm", lubm_like, None, LUBM_QUERIES),
-            ("sp2b", sp2b_like, None, SP2B_QUERIES)):
+            ("lubm", lubm_like, None, lubm_queries),
+            ("sp2b", sp2b_like, None, sp2b_queries)):
         for scale in scales:
             arg = scale if bench == "lubm" else scale * 2000
             tr, d, qs = gen(arg)
@@ -47,7 +50,8 @@ def run(scales=(1, 2, 4), emit=print):
                 pats = qs[qname]
                 res = {}
                 for mode in ("mapsin", "reduce"):
-                    t = _time(lambda m=mode: execute_local(store, pats, m, CFG))
+                    t = _time(lambda m=mode: execute_local(store, pats, m, CFG),
+                              repeats=repeats)
                     res[mode] = t
                 stats: list = []
                 execute_local(store, pats, "mapsin", CFG, stats=stats)

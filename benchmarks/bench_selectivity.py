@@ -12,9 +12,8 @@ from repro.core import ExecConfig, Pattern, build_store, execute_local
 from repro.core.bgp import query_traffic_actual
 
 
-def main(emit=print):
+def main(emit=print, n=200_000):
     rng = np.random.RandomState(0)
-    n = 200_000
     tr = np.stack([rng.randint(0, 20000, n), rng.randint(100, 110, n),
                    rng.randint(0, 20000, n)], 1).astype(np.int32)
     store = build_store(tr, 1)

@@ -1,21 +1,76 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines:
+Prints ``name,us_per_call,derived`` CSV lines and, per suite, writes a
+machine-readable ``BENCH_<suite>.json`` next to this file (name ->
+microseconds + parsed derived metrics) so successive PRs can diff the
+perf trajectory with a plain ``git diff`` / ``jq``:
   bench_loading      — paper Table 4  (bulk load times)
   bench_queries      — paper Table 5 / Figs 4,5,7 (MAPSIN vs reduce-side)
   bench_multiway     — paper Fig 6 / §4.3 (star-join single-GET optimization)
   bench_selectivity  — paper §5 analysis (win grows with selectivity)
   bench_kernels      — kernel hot-spot microbenches
 
+``python -m benchmarks.run --smoke`` (or ``python -m benchmarks.smoke``)
+runs every suite at minimal scale as a crash canary; see smoke.py.
+
 Roofline terms come from the dry-run artifacts: see
 ``python -m repro.launch.roofline`` (reads experiments/dryrun/*.json).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v) if "." in v or "e" in v.lower() else int(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def write_bench_json(suite: str, rows: dict, out_dir: str | None = None) -> str:
+    path = os.path.join(out_dir or os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": suite, "rows": rows}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run_suite(name: str, mod, emit=print) -> str:
+    """Run one suite, tee its CSV lines to `emit`, write BENCH_<name>.json."""
+    rows: dict = {}
+
+    def tee(line: str):
+        emit(line)
+        parts = str(line).split(",", 2)
+        if len(parts) >= 2:
+            try:
+                us = float(parts[1])
+            except ValueError:
+                return
+            rows[parts[0]] = {
+                "us": us,
+                "derived": _parse_derived(parts[2]) if len(parts) > 2 else {},
+            }
+
+    mod.main(emit=tee)
+    return write_bench_json(name, rows)
+
+
 def main() -> None:
+    args = [a for a in sys.argv[1:]]
+    if "--smoke" in args:
+        from benchmarks import smoke
+        raise SystemExit(smoke.main())
     from benchmarks import (bench_kernels, bench_loading, bench_multiway,
                             bench_queries, bench_selectivity)
     mods = {
@@ -25,12 +80,12 @@ def main() -> None:
         "selectivity": bench_selectivity,
         "kernels": bench_kernels,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     for name, mod in mods.items():
         if only and name != only:
             continue
-        mod.main(emit=print)
+        run_suite(name, mod)
 
 
 if __name__ == "__main__":

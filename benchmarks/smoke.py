@@ -1,0 +1,54 @@
+"""Bench-suite crash canary: every suite at minimal scale, < 60 s total.
+
+``python -m benchmarks.smoke`` (or ``python -m benchmarks.run --smoke``)
+exercises each benchmark module end-to-end on tiny inputs and exits
+nonzero if any suite raises — so regressions in the bench code itself
+(API drift, broken imports, shape bugs) are caught by one plain command
+without paying for a full perf run. No BENCH_*.json artifacts are
+written at smoke scale (they would clobber the real perf trajectory).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (bench_kernels, bench_loading, bench_multiway,
+                            bench_queries, bench_selectivity)
+    import dataclasses
+    small_mw = dataclasses.replace(bench_multiway.CFG, out_cap=1 << 12,
+                                   scan_cap=1 << 12, row_cap=16)
+    suites = [
+        ("loading", lambda emit: bench_loading.main(
+            emit=emit, lubm_scales=(1,), sp2b_scales=(500,))),
+        ("queries", lambda emit: bench_queries.run(
+            scales=(1,), emit=emit, lubm_queries=("Q1", "Q4"),
+            sp2b_queries=("Q10",), repeats=1)),
+        ("multiway", lambda emit: bench_multiway.main(
+            emit=emit, lubm_scale=1, sp2b_scale=500, cfg=small_mw)),
+        ("selectivity", lambda emit: bench_selectivity.main(
+            emit=emit, n=20_000)),
+        ("kernels", lambda emit: bench_kernels.main(
+            emit=emit, sizes=((1 << 12, 1 << 8),))),
+    ]
+    failures = []
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            fn(print)
+            print(f"smoke/{name},OK,{time.perf_counter() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            print(f"smoke/{name},FAIL,{time.perf_counter() - t0:.1f}s")
+            failures.append(name)
+    if failures:
+        print(f"smoke: FAILED suites: {', '.join(failures)}")
+        return 1
+    print("smoke: all suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,17 +20,36 @@ import jax.numpy as jnp
 from repro.core.mapsin import Bindings, apply_residual, compact, gather_range
 from repro.core.plan import make_plan, probe_ranges, residual_values, row_range
 from repro.core.rdf import unpack3
+from repro.core.triple_store import range_intersects_region
 
 
 def _axis_size(axis: str) -> int:
     return jax.lax.psum(1, axis)
 
 
+def _my_region(shard_splits, axis: str):
+    """This shard's (last-key-of-previous-shard, last-own-key] bounds from
+    the stored region boundaries (triple_store splits arrays)."""
+    if shard_splits is None:
+        return None
+    sp = jnp.asarray(shard_splits)
+    me = jax.lax.axis_index(axis)
+    return jnp.take(sp, me), jnp.take(sp, me + 1)
+
+
 def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
-               axis: str, impl: str = "jnp"):
-    """Distributed GET: broadcast probe keys, answer locally, scatter matches
+               axis: str, impl: str = "jnp", region=None):
+    """Distributed GET: ship probe keys, answer locally, scatter matches
     back to origin shards. lo/hi: (B,) local probes. Returns (k (B, cap),
-    valid (B, cap), missed (B,)) on the origin shard."""
+    valid (B, cap), missed (B,)) on the origin shard.
+
+    With `region` = this shard's (excl_lo, incl_hi] key bounds (the stored
+    HBase-style region boundaries), probes whose [lo, hi) range cannot
+    intersect the local slice are masked to empty BEFORE the rank-find /
+    residual / compaction work — the region-server routing HBase gives the
+    paper for free. Exact, not heuristic: keys are unique and globally
+    sorted across shards, so a range misses the region iff lo > incl_hi or
+    hi <= excl_lo + 1; masking such probes cannot change any result."""
     S = _axis_size(axis)
     B = lo.shape[0]
     me = jax.lax.axis_index(axis)
@@ -38,6 +57,10 @@ def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
     LO = jax.lax.all_gather(lo, axis).reshape(S * B)
     HI = jax.lax.all_gather(hi, axis).reshape(S * B)
     FLT = jax.lax.all_gather(flt, axis).reshape(S * B, 3)
+    if region is not None:   # split-aware routing: answer only what we own
+        hit = range_intersects_region(LO, HI, *region)
+        LO = jnp.where(hit, LO, 0)
+        HI = jnp.where(hit, HI, 0)
     # --- local index lookups (each shard answers its key range) ---
     k, valid, missed = gather_range(local_keys, LO, HI, probe_cap, impl)
     valid = apply_residual(k, valid, FLT, msk, eq_positions)
@@ -64,7 +87,8 @@ def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
 
 
 def dist_mapsin_step(bnd: Bindings, pattern, local_keys, probe_cap: int,
-                     out_cap: int, axis: str, impl: str = "jnp") -> Bindings:
+                     out_cap: int, axis: str, impl: str = "jnp",
+                     shard_splits=None) -> Bindings:
     """Algorithm 1, distributed: Omega stays in place; only keys + matches move."""
     from repro.core.mapsin import merge_bindings
     plan = make_plan(pattern, bnd.vars)
@@ -73,13 +97,14 @@ def dist_mapsin_step(bnd: Bindings, pattern, local_keys, probe_cap: int,
     hi = jnp.where(bnd.valid, hi, 0)
     flt, msk = residual_values(plan, bnd.table)
     k, valid, missed = dist_probe(lo, hi, flt, msk, plan.eq_positions,
-                                  local_keys, probe_cap, axis, impl)
+                                  local_keys, probe_cap, axis, impl,
+                                  region=_my_region(shard_splits, axis))
     return merge_bindings(bnd, plan, k, valid, missed, out_cap)
 
 
 def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
                        row_cap: int, out_cap: int, axis: str,
-                       impl: str = "jnp") -> Bindings:
+                       impl: str = "jnp", shard_splits=None) -> Bindings:
     """Algorithm 3, distributed: ONE row-GET round answers all star patterns
     (saves n-1 collective rounds — the paper's n-1 GETs per mapping)."""
     plans = [make_plan(p, bnd.vars) for p in patterns]
@@ -89,7 +114,8 @@ def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
     hi = jnp.where(bnd.valid, hi, 0)
     no_flt = jnp.zeros((bnd.capacity, 3), jnp.int64)
     k, in_row, missed = dist_probe(lo, hi, no_flt, (False,) * 3, (),
-                                   local_keys, row_cap, axis, impl)
+                                   local_keys, row_cap, axis, impl,
+                                   region=_my_region(shard_splits, axis))
     # local per-pattern filtering + iterative merge — reuse the local kernel
     from repro.core import mapsin as local
     out = bnd

@@ -53,21 +53,24 @@ class Bindings:
                    jnp.zeros((cap,), bool), jnp.zeros((), jnp.int32))
 
 
-def compact(rows: jnp.ndarray, valid: jnp.ndarray, out_cap: int):
+def compact(rows: jnp.ndarray, valid: jnp.ndarray, out_cap: int,
+            buf: jnp.ndarray | None = None):
     """Pack valid rows (N, nv) to the front of a (out_cap, nv) buffer.
 
-    Returns (table, valid_mask, n_dropped).
+    Returns (table, valid_mask, n_dropped). When `buf` (a zeroed
+    (out_cap, nv) array, e.g. a donated scratch Bindings table) is given,
+    rows are scattered straight into it — no fresh allocation.
     """
-    n = rows.shape[0]
     pos = jnp.cumsum(valid.astype(jnp.int32)) - 1          # target slot
     keep = valid & (pos < out_cap)
     total = jnp.sum(valid.astype(jnp.int32))
     dropped = jnp.maximum(total - out_cap, 0)
-    slot = jnp.where(keep, pos, out_cap)                    # spill row
-    out = jnp.zeros((out_cap + 1, rows.shape[1]), rows.dtype)
-    out = out.at[slot].set(jnp.where(keep[:, None], rows, 0))
+    slot = jnp.where(keep, pos, out_cap)                    # OOB => dropped
+    if buf is None:
+        buf = jnp.zeros((out_cap, rows.shape[1]), rows.dtype)
+    out = buf.at[slot].set(jnp.where(keep[:, None], rows, 0), mode="drop")
     vmask = jnp.arange(out_cap) < jnp.minimum(total, out_cap)
-    return out[:out_cap], vmask, dropped
+    return out, vmask, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -118,11 +121,21 @@ def probe(plan: PatternPlan, keys: jnp.ndarray, table: jnp.ndarray,
     """The MAPSIN inner loop body: dynamic GET for each input mapping.
 
     Returns (matched keys (B, cap), match mask, missed counts (B,)).
+    With impl="pallas"/"pallas_interpret" the whole GET — rank-find, range
+    gather, residual filter, slot placement — runs as ONE fused kernel
+    (kernels/probe_gather.py); the jnp path below is the validated
+    reference (match keys differ only at masked slots: the kernel writes
+    0 where the reference leaves clamped-gather garbage).
     """
     lo, hi = probe_ranges(plan, table)
     lo = jnp.where(row_valid, lo, 0)
     hi = jnp.where(row_valid, hi, 0)   # invalid rows probe an empty range
     flt, msk = residual_values(plan, table)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops
+        return ops.probe_gather(keys, lo, hi, flt, cap=cap, flt_mask=msk,
+                                eq_positions=plan.eq_positions,
+                                interpret=(impl == "pallas_interpret"))
     k, valid, missed = gather_range(keys, lo, hi, cap, impl)
     valid = apply_residual(k, valid, flt, msk, plan.eq_positions)
     return k, valid, missed
@@ -131,16 +144,26 @@ def probe(plan: PatternPlan, keys: jnp.ndarray, table: jnp.ndarray,
 def merge_bindings(bindings: Bindings, plan: PatternPlan, k: jnp.ndarray,
                    match: jnp.ndarray, missed: jnp.ndarray,
                    out_cap: int) -> Bindings:
-    """Merge mu_n with compatible mappings (Alg. 1 lines 11-17)."""
+    """Merge mu_n with compatible mappings (Alg. 1 lines 11-17).
+
+    Instead of broadcasting the old table to (bcap, cap, n_vars) and
+    compacting the full widened rows, only the ORIGIN index plus the <= 3
+    newly bound columns are scattered; the surviving old columns are
+    gathered once at the end — the intermediate shrinks from
+    (bcap*cap, n_vars+new) to (bcap*cap, 1+new).
+    """
     bcap, cap = match.shape
     t = unpack3(k)
-    old = jnp.broadcast_to(bindings.table[:, None, :],
-                           (bcap, cap, len(bindings.vars)))
-    new_cols = [t[pos][..., None] for _, pos in plan.out_vars]
-    rows = jnp.concatenate([old] + new_cols, axis=-1) if new_cols else old
-    rows = rows.reshape(bcap * cap, -1).astype(jnp.int32)
+    origin = jnp.broadcast_to(
+        jnp.arange(bcap, dtype=jnp.int32)[:, None], (bcap, cap))
+    cols = [origin] + [t[pos].astype(jnp.int32) for _, pos in plan.out_vars]
+    rows = jnp.stack([c.reshape(-1) for c in cols], axis=1)
     valid = (match & bindings.valid[:, None]).reshape(-1)
-    table, vmask, dropped = compact(rows, valid, out_cap)
+    packed, vmask, dropped = compact(rows, valid, out_cap)
+    table = bindings.table[packed[:, 0]]
+    if plan.out_vars:
+        table = jnp.concatenate([table, packed[:, 1:]], axis=1)
+    table = jnp.where(vmask[:, None], table, 0)
     overflow = (bindings.overflow + dropped
                 + jnp.sum(jnp.where(bindings.valid, missed, 0)).astype(jnp.int32))
     return Bindings(bindings.vars + plan.out_var_names, table, vmask, overflow)
@@ -152,10 +175,12 @@ def merge_bindings(bindings: Bindings, plan: PatternPlan, k: jnp.ndarray,
 
 
 def scan_pattern(pattern, keys: jnp.ndarray, out_cap: int,
-                 impl: str = "jnp") -> Bindings:
+                 impl: str = "jnp", scratch: "Bindings | None" = None) -> Bindings:
     """First-pattern input phase: scan the (locally stored) index slice.
 
     Equivalent of the distributed HBase table scan that feeds the map phase.
+    `scratch` (a zeroed Bindings of matching shape, typically donated by the
+    jitted cascade in core/bgp.py) is consumed as the output buffers.
     """
     plan = make_plan(pattern, ())
     empty = jnp.zeros((1, 0), jnp.int32)
@@ -169,8 +194,13 @@ def scan_pattern(pattern, keys: jnp.ndarray, out_cap: int,
     cols = [t[pos][:, None] for _, pos in plan.out_vars]
     rows = (jnp.concatenate(cols, axis=-1) if cols
             else jnp.zeros((keys.shape[0], 0), jnp.int64)).astype(jnp.int32)
-    table, vmask, dropped = compact(rows, within, out_cap)
-    return Bindings(plan.out_var_names, table, vmask, dropped.astype(jnp.int32))
+    buf = scratch.table if scratch is not None else None
+    table, vmask, dropped = compact(rows, within, out_cap, buf=buf)
+    overflow = dropped.astype(jnp.int32)
+    if scratch is not None:
+        vmask = vmask | scratch.valid          # zeros; consumes the buffer
+        overflow = overflow + scratch.overflow
+    return Bindings(plan.out_var_names, table, vmask, overflow)
 
 
 def mapsin_step(bindings: Bindings, pattern, keys: jnp.ndarray,

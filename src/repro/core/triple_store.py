@@ -37,6 +37,11 @@ class TripleStore:
     counts_spo: jnp.ndarray  # (num_shards,) valid entries per shard
     counts_ops: jnp.ndarray
     n_triples: int
+    # host-side memo: flattened keys, measured cardinalities, ordered step
+    # plans and compiled cascades keyed by (patterns, cfg) — keeps repeated
+    # query execution off the eager-dispatch path (core/bgp.py)
+    plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
 
     @property
     def num_shards(self) -> int:
@@ -50,10 +55,28 @@ class TripleStore:
         return self.keys_spo if index == SPO else self.keys_ops
 
     def flat_keys(self, index: int) -> jnp.ndarray:
-        return self.keys(index).reshape(-1)
+        key = ("flat_keys", index)
+        if key not in self.plan_cache:
+            self.plan_cache[key] = self.keys(index).reshape(-1)
+        return self.plan_cache[key]
+
+    def splits(self, index: int) -> jnp.ndarray:
+        return self.splits_spo if index == SPO else self.splits_ops
 
     def storage_bytes(self) -> int:
         return int(self.keys_spo.size + self.keys_ops.size) * 8
+
+
+def range_intersects_region(lo, hi, excl_lo, incl_hi):
+    """Does probe range [lo, hi) intersect region (excl_lo, incl_hi]?
+
+    Exact, not heuristic, because store keys are unique and globally
+    sorted: the range misses the region iff lo > incl_hi or
+    hi <= excl_lo + 1. The single source of truth for both the routed
+    dist_probe mask (core/distributed.py) and the measured fan-out
+    accounting (core/bgp.py). Works elementwise on numpy or jnp arrays.
+    """
+    return (lo <= incl_hi) & (hi > excl_lo + 1)
 
 
 def _shard_sorted(keys: np.ndarray, num_shards: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.rdf import BITS, MAX_ID
 from repro.kernels import flash_attention as _fa
+from repro.kernels import probe_gather as _pg
 from repro.kernels import searchsorted as _ss
 
 
@@ -36,6 +37,30 @@ def searchsorted(keys: jax.Array, queries: jax.Array, *,
     return _ss.searchsorted3(unpack_to_cols(keys), unpack_to_cols(queries),
                              block_k=block_k, block_q=block_q,
                              interpret=interpret).astype(jnp.int64)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "flt_mask", "eq_positions",
+                                    "interpret", "block_k", "block_q"))
+def probe_gather(keys: jax.Array, lo: jax.Array, hi: jax.Array,
+                 flt: jax.Array, *, cap: int,
+                 flt_mask: tuple = (False, False, False),
+                 eq_positions: tuple = (), interpret: bool = True,
+                 block_k: int = 2048, block_q: int = 256):
+    """Fused MAPSIN probe on packed int64 keys — drop-in for the jnp
+    gather_range + apply_residual pair in core/mapsin.py `probe`.
+
+    Returns (k (B, cap) int64 packed match keys, 0 where invalid;
+    valid (B, cap) bool; missed (B,) int32)."""
+    match3, valid, missed = _pg.probe_gather3(
+        unpack_to_cols(keys), unpack_to_cols(lo), unpack_to_cols(hi),
+        flt.astype(jnp.int32), cap=cap, flt_mask=flt_mask,
+        eq_positions=eq_positions, block_k=block_k, block_q=block_q,
+        interpret=interpret)
+    k = ((match3[..., 0].astype(jnp.int64) << (2 * BITS))
+         | (match3[..., 1].astype(jnp.int64) << BITS)
+         | match3[..., 2].astype(jnp.int64))
+    return jnp.where(valid, k, 0), valid, missed
 
 
 @functools.partial(jax.jit,

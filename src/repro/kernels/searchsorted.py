@@ -62,7 +62,9 @@ def _kernel(k_ref, q_ref, out_ref, *, block_k: int, nk: int):
     def _boundary():  # elementwise compare tile
         lt = _less3(ks0[:, None], ks1[:, None], ks2[:, None],
                     qs0[None, :], qs1[None, :], qs2[None, :])
-        out_ref[...] = out_ref[...] + jnp.sum(lt.astype(jnp.int32), axis=0)
+        # keep the accumulator int32: jnp.sum would promote under x64
+        out_ref[...] = out_ref[...] + jnp.sum(lt.astype(jnp.int32), axis=0,
+                                              dtype=jnp.int32)
 
 
 def searchsorted3(keys3: jax.Array, queries3: jax.Array, *,

@@ -1,0 +1,34 @@
+"""Fallback shims when `hypothesis` is not installed (see requirements-dev.txt).
+
+The tier-1 suite must collect and run without optional dev dependencies:
+property tests decorated with the stub `given` are individually skipped,
+while every example-based test in the same module still executes.  Import
+pattern used by the test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # property tests skip; the suite still runs
+        from _hypothesis_stub import given, settings, st
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Any strategy constructor (st.integers(...), st.lists(...)) -> None;
+    the stub `given` never calls them."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

@@ -1,6 +1,10 @@
 """Unit tests: key packing, compaction, plan selection (paper Table 3)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the suite still runs
+    from _hypothesis_stub import given, settings, st
 
 import jax.numpy as jnp
 

@@ -31,7 +31,10 @@ def xla_flops(cfg, shape, rng):
         return l, g
 
     comp = jax.jit(loss_grads).lower(params, batch).compile()
-    return float(comp.cost_analysis()["flops"])
+    ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older JAX: one dict per device
+        ca = ca[0]
+    return float(ca["flops"])
 
 
 @pytest.mark.parametrize("arch", ["yi-6b", "qwen3-8b"])
