@@ -71,14 +71,15 @@ def main() -> None:
     if "--smoke" in args:
         from benchmarks import smoke
         raise SystemExit(smoke.main())
-    from benchmarks import (bench_kernels, bench_loading, bench_multiway,
-                            bench_queries, bench_selectivity)
+    from benchmarks import (bench_distributed, bench_kernels, bench_loading,
+                            bench_multiway, bench_queries, bench_selectivity)
     mods = {
         "loading": bench_loading,
         "queries": bench_queries,
         "multiway": bench_multiway,
         "selectivity": bench_selectivity,
         "kernels": bench_kernels,
+        "distributed": bench_distributed,
     }
     only = args[0] if args else None
     print("name,us_per_call,derived")

@@ -6,6 +6,10 @@ nonzero if any suite raises — so regressions in the bench code itself
 (API drift, broken imports, shape bugs) are caught by one plain command
 without paying for a full perf run. No BENCH_*.json artifacts are
 written at smoke scale (they would clobber the real perf trajectory).
+
+Exception: bench_distributed is NOT smoked here — it spawns an 8-device
+subprocess and pays minutes of shard_map compiles even at minimal scale;
+its engine path is covered by tests/test_multidevice.py instead.
 """
 from __future__ import annotations
 

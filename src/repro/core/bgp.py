@@ -43,6 +43,11 @@ class ExecConfig:
     multiway: bool = True
     route_shards: int = 10       # hypothetical cluster for routed traffic
                                  # measurement (paper's 10-node setup)
+    routing: str = "broadcast"   # dist_probe collective: broadcast | a2a
+                                 # (a2a = point-to-point region routing)
+    a2a_bucket_cap: int = 0      # per-destination probe bucket capacity for
+                                 # routing="a2a"; 0 = auto (2x uniform
+                                 # share), out_cap = drop-free guarantee
 
 
 @dataclasses.dataclass(frozen=True)
@@ -421,13 +426,15 @@ def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
                     bnd = dist.dist_multiway_step(
                         bnd, st.patterns, keys, cfg.row_cap, cfg.out_cap,
                         axis, cfg.impl,
-                        shard_splits=splits_of(st.patterns[0], bnd.vars))
+                        shard_splits=splits_of(st.patterns[0], bnd.vars),
+                        routing=cfg.routing, bucket_cap=cfg.a2a_bucket_cap)
                 else:
                     keys = keys_of(st.patterns[0], bnd.vars)
                     bnd = dist.dist_mapsin_step(
                         bnd, st.patterns[0], keys, cfg.probe_cap, cfg.out_cap,
                         axis, cfg.impl,
-                        shard_splits=splits_of(st.patterns[0], bnd.vars))
+                        shard_splits=splits_of(st.patterns[0], bnd.vars),
+                        routing=cfg.routing, bucket_cap=cfg.a2a_bucket_cap)
             else:
                 for pat in st.patterns:
                     keys = keys_of(pat, ())  # relation scan: empty domain
@@ -440,11 +447,17 @@ def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
 
 def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
                     mesh, mode: str = "mapsin",
-                    cfg: ExecConfig = ExecConfig(), axis: str = "data"):
+                    cfg: ExecConfig = ExecConfig(), axis: str = "data",
+                    routing: str | None = None):
     """Distributed execution under shard_map on `mesh` (store sharded on
-    `axis`). Probes are routed via the stored region splits: each shard
-    answers only ranges intersecting its slice (see dist.dist_probe).
+    `axis`). Probes are routed via the stored region splits: with
+    cfg.routing == "broadcast" every shard sees every probe and answers
+    only ranges intersecting its slice; with "a2a" each probe record is
+    shipped point-to-point to exactly the intersecting shards
+    (dist._dist_probe_a2a). `routing` overrides cfg.routing when given.
     Returns (table (S*cap, nv), valid, overflow (S,), vars)."""
+    if routing is not None:
+        cfg = dataclasses.replace(cfg, routing=routing)
     steps = plan_steps(patterns, cfg, store)
     # derive final var order (static)
     domain: list[str] = []
@@ -452,15 +465,23 @@ def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
         for pat in st.patterns:
             plan = make_plan(pat, domain)
             domain.extend(plan.out_var_names)
-    fn = _sharded_fn(steps, mode, cfg, axis,
-                     splits_spo=np.asarray(store.splits_spo),
-                     splits_ops=np.asarray(store.splits_ops))
-    sharded = shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None)),
-        out_specs=(P(axis, None), P(axis), P(axis)),
-        check_rep=False)
-    table, valid, overflow = jax.jit(sharded)(store.keys_spo, store.keys_ops)
+    # cache the jitted shard_map per (plan, mode, cfg, mesh): a fresh
+    # closure every call would defeat jax's jit cache (keyed on function
+    # identity) and re-trace + re-compile on each execution
+    ck = ("sharded", tuple(steps), mode, cfg, axis, mesh)
+    jitted = store.plan_cache.get(ck)
+    if jitted is None:
+        fn = _sharded_fn(steps, mode, cfg, axis,
+                         splits_spo=np.asarray(store.splits_spo),
+                         splits_ops=np.asarray(store.splits_ops))
+        sharded = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None)),
+            out_specs=(P(axis, None), P(axis), P(axis)),
+            check_rep=False)
+        jitted = jax.jit(sharded)
+        store.plan_cache[ck] = jitted
+    table, valid, overflow = jitted(store.keys_spo, store.keys_ops)
     return table, valid, overflow, tuple(domain)
 
 

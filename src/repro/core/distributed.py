@@ -1,14 +1,27 @@
 """Distributed MAPSIN execution: shard_map + explicit collectives.
 
 Traffic model (the faithful translation of the paper's network argument):
-  MAPSIN step   — all_gather(probe keys)  +  psum_scatter(matches)
-                  == ship ONLY probe keys and ONLY matching tuples.
+  MAPSIN step   — ship ONLY probe keys and ONLY matching tuples, two ways:
+      routing="broadcast" — all_gather(probe keys) + psum_scatter(matches):
+                  every shard sees every probe and answers the ones whose
+                  range intersects its region. Pays O(S) on the key leg;
+                  kept as the validated reference path.
+      routing="a2a"       — point-to-point dispatch (DESIGN.md §2): each
+                  probe record (lo/hi/filters) is bucketed by the region(s)
+                  its range intersects (the stored splits) and shipped with
+                  all_to_all only to those shards; matches ride a second
+                  all_to_all home, keyed on the sender's bucket slots. This
+                  is the paper's HBase region-server GET: O(B) probe bytes,
+                  independent of the cluster size.
   reduce-side   — all_to_all(BOTH full relations)  (see reduce_side.py)
 
 The store is range-sharded; a probe whose key range spans several shards
 (fat rows, the `rdf:type` problem) is answered by every intersecting shard
 and the per-shard match counts are offset-composed, so results concatenate
-exactly once — the compound-rowkey fix without compound keys.
+exactly once — the compound-rowkey fix without compound keys. Both routings
+preserve that invariant: per-shard matches are packed in key order and
+offsets compose in shard (= global key) order, so the two paths produce
+bit-identical Bindings.
 """
 from __future__ import annotations
 
@@ -37,11 +50,150 @@ def _my_region(shard_splits, axis: str):
     return jnp.take(sp, me), jnp.take(sp, me + 1)
 
 
+def bucket_rows(send: jnp.ndarray, cap: int, payload: Sequence[jnp.ndarray]):
+    """Pack records into per-destination send buckets (the shared bucketing
+    machinery behind `repartition` and the a2a probe dispatch).
+
+    send: (n, S) bool — record i is addressed to destination s; a record may
+    target several destinations (the fat-row fan-out) or none (invalid /
+    masked rows). payload: arrays shaped (n,) or (n, k), scattered together.
+
+    Returns (bufs, slot, dropped):
+      bufs    — one (S, cap[, k]) buffer per payload array, records packed
+                to the front of each destination bucket in row order;
+      slot    — (n, S) int32, the in-bucket position each (record, dest)
+                copy landed at, == cap for copies not shipped (dropped or
+                not addressed) — the sender's receipt, used to claim
+                answers that come back in bucket order;
+      dropped — (n,) int32 count of addressed-but-dropped copies per record
+                (bucket overflow; surfaced, never silent).
+    """
+    n, S = send.shape
+    rank = jnp.cumsum(send.astype(jnp.int32), axis=0) - 1        # (n, S)
+    keep = send & (rank < cap)
+    slot = jnp.where(keep, rank, cap)                            # cap == spill
+    dest = jnp.broadcast_to(jnp.arange(S)[None, :], (n, S))
+    bufs = []
+    for p in payload:
+        extra = p.shape[1:]
+        kmask = keep.reshape((n, S) + (1,) * len(extra))
+        val = jnp.broadcast_to(p[:, None], (n, S) + extra)
+        buf = jnp.zeros((S, cap + 1) + extra, p.dtype)
+        buf = buf.at[dest, slot].set(
+            jnp.where(kmask, val, jnp.zeros((), p.dtype)))
+        bufs.append(buf[:, :cap])
+    dropped = jnp.sum(send & ~keep, axis=1).astype(jnp.int32)
+    return bufs, slot, dropped
+
+
+def _a2a(x, axis: str):
+    """Tiled all_to_all over leading (S * cap) blocks."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def _pack_matches(k, valid, cap: int):
+    """Compact each row's matches to the front (key order preserved):
+    returns ((n, cap) int64 of key+1 with 0 == empty, (n,) int32 counts)."""
+    n = k.shape[0]
+    pos = jnp.cumsum(valid, axis=-1) - 1
+    slot = jnp.where(valid, pos, cap)
+    buf = jnp.zeros((n, cap + 1), jnp.int64)
+    buf = buf.at[jnp.arange(n)[:, None], slot].set(
+        jnp.where(valid, k + 1, 0))
+    return buf[:, :cap], jnp.sum(valid, axis=-1).astype(jnp.int32)
+
+
+def auto_bucket_cap(batch: int, num_shards: int) -> int:
+    """Default per-destination probe bucket capacity: 2x the uniform share
+    (skew headroom), floored at 32, never beyond `batch` (a shard never
+    receives more than one copy of each probe, so `batch` is exact)."""
+    from repro.common import ceil_div
+    return min(batch, max(ceil_div(2 * batch, num_shards), 32))
+
+
+def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
+                    probe_cap: int, axis: str, impl: str, splits,
+                    bucket_cap: int):
+    """Point-to-point routed GET (the paper's region-server RPC).
+
+    Four phases, two all_to_all rounds, zero all_gathers:
+      1. route   — (B, S) hit matrix from the stored region boundaries
+                   (range_intersects_region: exact, keys unique + globally
+                   sorted), bucket each probe record (lo, hi, filters) per
+                   destination region with `bucket_rows`;
+      2. ship    — one all_to_all moves every bucket to its region server;
+      3. answer  — local rank-find + gather + residual push-down on the
+                   received records, matches packed to the bucket front in
+                   key order;
+      4. return  — a second all_to_all routes (matches, counts, missed)
+                   back; the sender claims them by its recorded bucket
+                   slots and offset-composes counts in shard order, so a
+                   fat row spanning regions still concatenates exactly
+                   once, bit-identical to the broadcast path.
+
+    Bucket overflow (more probes routed to one region than `bucket_cap`)
+    drops the spilled copies and surfaces them in the returned missed
+    counts — size `bucket_cap` at the per-destination load (== B for a
+    drop-free guarantee).
+    """
+    S = _axis_size(axis)
+    B = lo.shape[0]
+    sp = jnp.asarray(splits)
+    send = range_intersects_region(lo[:, None], hi[:, None],
+                                   sp[None, :-1], sp[None, 1:])
+    send = send & (hi > lo)[:, None]
+    (slo, shi, sflt), slot, drop_cnt = bucket_rows(
+        send, bucket_cap, [lo, hi, flt])
+    # --- ship probe records point-to-point (keys-only traffic, O(B)) ---
+    rlo = _a2a(slo, axis).reshape(S * bucket_cap)
+    rhi = _a2a(shi, axis).reshape(S * bucket_cap)
+    rflt = _a2a(sflt, axis).reshape(S * bucket_cap, 3)
+    # --- answer locally (each record was routed here on purpose) ---
+    k, valid, missed = gather_range(local_keys, rlo, rhi, probe_cap, impl)
+    valid = apply_residual(k, valid, rflt, msk, eq_positions)
+    ans, cnt = _pack_matches(k, valid, probe_cap)
+    # --- route matches home (matches-only traffic) ---
+    ANS = _a2a(ans.reshape(S, bucket_cap, probe_cap), axis)
+    CNT = _a2a(cnt.reshape(S, bucket_cap), axis)
+    MISS = _a2a(missed.reshape(S, bucket_cap), axis)
+    # claim this shard's answers by bucket slot (block s answered shard s)
+    pad = lambda a: jnp.concatenate(
+        [a, jnp.zeros_like(a[:, :1])], axis=1)          # slot == cap -> 0
+    dest = jnp.arange(S)[None, :]
+    cnt_bs = pad(CNT)[dest, slot]                       # (B, S)
+    miss_bs = pad(MISS)[dest, slot]
+    ans_bs = pad(ANS)[dest, slot]                       # (B, S, probe_cap)
+    # --- offset-compose counts in shard (= global key) order ---
+    off = jnp.cumsum(cnt_bs, axis=1) - cnt_bs
+    total = jnp.sum(cnt_bs, axis=1)
+    j = jnp.arange(probe_cap)[None, None, :]
+    live = j < cnt_bs[:, :, None]
+    pos = off[:, :, None] + j
+    keep = live & (pos < probe_cap)
+    pos = jnp.where(keep, pos, probe_cap)
+    buf = jnp.zeros((B, probe_cap + 1), jnp.int64)
+    buf = buf.at[jnp.arange(B)[:, None, None], pos].set(
+        jnp.where(keep, ans_bs, 0))
+    mine = buf[:, :probe_cap]
+    mv = mine > 0
+    mk = jnp.where(mv, mine - 1, 0)
+    my_missed = (jnp.sum(miss_bs, axis=1) + jnp.maximum(total - probe_cap, 0)
+                 + drop_cnt)
+    return mk, mv, my_missed.astype(jnp.int32)
+
+
 def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
-               axis: str, impl: str = "jnp", region=None):
+               axis: str, impl: str = "jnp", region=None,
+               routing: str = "broadcast", splits=None, bucket_cap: int = 0):
     """Distributed GET: ship probe keys, answer locally, scatter matches
     back to origin shards. lo/hi: (B,) local probes. Returns (k (B, cap),
     valid (B, cap), missed (B,)) on the origin shard.
+
+    routing="a2a" (requires `splits`, the full (S+1,) region boundaries)
+    dispatches each probe only to the shards its range intersects via
+    _dist_probe_a2a — the point-to-point production path. The broadcast
+    body below is the validated reference; both return identical results.
 
     With `region` = this shard's (excl_lo, incl_hi] key bounds (the stored
     HBase-style region boundaries), probes whose [lo, hi) range cannot
@@ -50,6 +202,15 @@ def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
     paper for free. Exact, not heuristic: keys are unique and globally
     sorted across shards, so a range misses the region iff lo > incl_hi or
     hi <= excl_lo + 1; masking such probes cannot change any result."""
+    if routing == "a2a":
+        if splits is None:
+            raise ValueError("routing='a2a' needs the stored region splits")
+        S = _axis_size(axis)
+        cap = bucket_cap if bucket_cap > 0 else auto_bucket_cap(lo.shape[0], S)
+        return _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
+                               probe_cap, axis, impl, splits, cap)
+    if routing != "broadcast":
+        raise ValueError(f"unknown routing {routing!r}")
     S = _axis_size(axis)
     B = lo.shape[0]
     me = jax.lax.axis_index(axis)
@@ -88,7 +249,8 @@ def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
 
 def dist_mapsin_step(bnd: Bindings, pattern, local_keys, probe_cap: int,
                      out_cap: int, axis: str, impl: str = "jnp",
-                     shard_splits=None) -> Bindings:
+                     shard_splits=None, routing: str = "broadcast",
+                     bucket_cap: int = 0) -> Bindings:
     """Algorithm 1, distributed: Omega stays in place; only keys + matches move."""
     from repro.core.mapsin import merge_bindings
     plan = make_plan(pattern, bnd.vars)
@@ -98,13 +260,17 @@ def dist_mapsin_step(bnd: Bindings, pattern, local_keys, probe_cap: int,
     flt, msk = residual_values(plan, bnd.table)
     k, valid, missed = dist_probe(lo, hi, flt, msk, plan.eq_positions,
                                   local_keys, probe_cap, axis, impl,
-                                  region=_my_region(shard_splits, axis))
+                                  region=_my_region(shard_splits, axis),
+                                  routing=routing, splits=shard_splits,
+                                  bucket_cap=bucket_cap)
     return merge_bindings(bnd, plan, k, valid, missed, out_cap)
 
 
 def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
                        row_cap: int, out_cap: int, axis: str,
-                       impl: str = "jnp", shard_splits=None) -> Bindings:
+                       impl: str = "jnp", shard_splits=None,
+                       routing: str = "broadcast",
+                       bucket_cap: int = 0) -> Bindings:
     """Algorithm 3, distributed: ONE row-GET round answers all star patterns
     (saves n-1 collective rounds — the paper's n-1 GETs per mapping)."""
     plans = [make_plan(p, bnd.vars) for p in patterns]
@@ -115,7 +281,9 @@ def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
     no_flt = jnp.zeros((bnd.capacity, 3), jnp.int64)
     k, in_row, missed = dist_probe(lo, hi, no_flt, (False,) * 3, (),
                                    local_keys, row_cap, axis, impl,
-                                   region=_my_region(shard_splits, axis))
+                                   region=_my_region(shard_splits, axis),
+                                   routing=routing, splits=shard_splits,
+                                   bucket_cap=bucket_cap)
     # local per-pattern filtering + iterative merge — reuse the local kernel
     from repro.core import mapsin as local
     out = bnd
@@ -163,22 +331,10 @@ def repartition(table: jnp.ndarray, valid: jnp.ndarray, key: jnp.ndarray,
     """
     S = _axis_size(axis)
     n, nv = table.shape
-    dest = jnp.where(valid, key % S, S)                   # invalid -> sentinel
-    order = jnp.argsort(dest)
-    rows, dsort, vsort = table[order], dest[order], valid[order]
-    start = jnp.searchsorted(dsort, jnp.arange(S))
-    slot = jnp.arange(n) - start[jnp.minimum(dsort, S - 1)]
-    keep = vsort & (slot < bucket_cap) & (dsort < S)
-    slot = jnp.where(keep, slot, bucket_cap)
-    buf = jnp.zeros((S, bucket_cap + 1, nv), table.dtype)
-    buf = buf.at[jnp.minimum(dsort, S - 1), slot].set(
-        jnp.where(keep[:, None], rows, 0))
-    vbuf = jnp.zeros((S, bucket_cap + 1), bool)
-    vbuf = vbuf.at[jnp.minimum(dsort, S - 1), slot].set(keep)
-    buf, vbuf = buf[:, :bucket_cap], vbuf[:, :bucket_cap]
-    dropped = jnp.sum(vsort & (dsort < S) & ~keep).astype(jnp.int32)
+    send = valid[:, None] & (key[:, None] % S == jnp.arange(S)[None, :])
+    (buf, vbuf), _, drop_cnt = bucket_rows(send, bucket_cap, [table, valid])
     # the shuffle: BOTH relations cross the network in full
-    recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
-    vrecv = jax.lax.all_to_all(vbuf, axis, split_axis=0, concat_axis=0, tiled=True)
+    recv = _a2a(buf, axis)
+    vrecv = _a2a(vbuf, axis)
     return (recv.reshape(S * bucket_cap, nv), vrecv.reshape(S * bucket_cap),
-            jax.lax.psum(dropped, axis))
+            jax.lax.psum(jnp.sum(drop_cnt), axis))

@@ -86,6 +86,27 @@ def _resolve(source: Source, table: jnp.ndarray) -> jnp.ndarray:
     return table[:, v].astype(jnp.int64)
 
 
+def next_prefix(lo: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Exclusive upper bound of the composite-key range whose bound prefix
+    ends `shift` bits above the bottom: ``lo + (1 << shift)``, saturated at
+    INF_KEY.
+
+    The former ``pack3(v, w + 1, 0)`` formulation is wrong at the field
+    boundary: with ``w == MAX_ID`` the incremented field spills into the
+    field above, and ``pack3``'s ``|`` cannot carry — the stray bit lands on
+    an already-set bit, yielding ``hi <= lo`` (a silently empty range); with
+    a *leading* field at MAX_ID the shift wraps int64 negative. Plain
+    integer addition carries correctly across fields; the single remaining
+    overflow (every bound field at MAX_ID, so ``lo + (1 << shift)`` = 2^63)
+    saturates to INF_KEY, which as an *exclusive* bound still covers every
+    storable key: real keys are < INF_KEY — it is the padding sentinel, and
+    the one colliding triple (MAX_ID, MAX_ID, MAX_ID) is rejected by
+    build_store (the Dictionary reserves id MAX_ID).
+    """
+    hi = lo + (jnp.int64(1) << shift)
+    return jnp.where(hi < lo, jnp.int64(INF_KEY), hi)
+
+
 def probe_ranges(plan: PatternPlan, table: jnp.ndarray):
     """Compute per-binding [lo, hi) composite-key ranges. table: (B, nv)."""
     b = table.shape[0]
@@ -97,13 +118,13 @@ def probe_ranges(plan: PatternPlan, table: jnp.ndarray):
         hi = jnp.full((b,), INF_KEY, jnp.int64)
     elif plen == 1:
         lo = pack3(vals[0], zero, zero)
-        hi = pack3(vals[0] + 1, zero, zero)
+        hi = next_prefix(lo, 2 * BITS)
     elif plen == 2:
         lo = pack3(vals[0], vals[1], zero)
-        hi = pack3(vals[0], vals[1] + 1, zero)
+        hi = next_prefix(lo, BITS)
     else:
         lo = pack3(vals[0], vals[1], vals[2])
-        hi = lo + 1
+        hi = next_prefix(lo, 0)
     return lo, hi
 
 
@@ -120,8 +141,11 @@ def residual_values(plan: PatternPlan, table: jnp.ndarray):
 
 def row_range(plan: PatternPlan, table: jnp.ndarray):
     """Whole-row range on the primary key only (multiway single-GET,
-    paper Alg. 3): [pack(v, 0, 0), pack(v+1, 0, 0))."""
+    paper Alg. 3): [pack(v, 0, 0), pack(v, 0, 0) + 2^42) — same
+    boundary-safe arithmetic as probe_ranges (next_prefix), since
+    ``pack3(v + 1, 0, 0)`` wraps negative at v == MAX_ID."""
     assert len(plan.prefix) >= 1
     v = _resolve(plan.prefix[0], table)
     zero = jnp.zeros_like(v)
-    return pack3(v, zero, zero), pack3(v + 1, zero, zero)
+    lo = pack3(v, zero, zero)
+    return lo, next_prefix(lo, 2 * BITS)

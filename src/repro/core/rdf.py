@@ -83,8 +83,10 @@ class Dictionary:
     def id(self, term: str) -> int:
         if term not in self._fwd:
             i = len(self._bwd)
-            if i > MAX_ID:
-                raise ValueError("term dictionary overflow (> 2^21 terms)")
+            # id MAX_ID is reserved: the triple (MAX_ID, MAX_ID, MAX_ID)
+            # would pack to INF_KEY, the store's padding sentinel
+            if i >= MAX_ID:
+                raise ValueError("term dictionary overflow (>= 2^21 - 1 terms)")
             self._fwd[term] = i
             self._bwd.append(term)
         return self._fwd[term]

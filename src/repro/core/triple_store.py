@@ -103,6 +103,13 @@ def build_store(triples: np.ndarray, num_shards: int = 1) -> TripleStore:
     s, p, o = triples[:, 0], triples[:, 1], triples[:, 2]
     k_spo = np.sort(pack3(s, p, o))
     k_ops = np.sort(pack3(o, p, s))
+    if len(k_spo) and k_spo[-1] == INF_KEY:
+        # (MAX_ID, MAX_ID, MAX_ID) packs to the INF_KEY padding sentinel:
+        # it would be indistinguishable from padding and unfindable (every
+        # probe range's exclusive hi saturates at INF_KEY). The Dictionary
+        # reserves id MAX_ID so encoded data can never hit this.
+        raise ValueError("triple (MAX_ID, MAX_ID, MAX_ID) packs to the "
+                         "INF_KEY sentinel and cannot be stored")
     # dedup (RDF set semantics)
     k_spo = np.unique(k_spo)
     k_ops = np.unique(k_ops)

@@ -17,6 +17,8 @@ from repro.optim import OptConfig, init_opt_state
 
 from conftest import make_lm_batch
 
+pytestmark = pytest.mark.slow  # minutes: every arch compiles a train step
+
 ARCHS = list_archs()
 S, B = 64, 2
 

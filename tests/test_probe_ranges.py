@@ -1,0 +1,125 @@
+"""Regression tests: composite-key [lo, hi) bounds at the field boundary.
+
+The former ``pack3(v, w + 1, 0)`` / ``pack3(v + 1, 0, 0)`` upper bounds are
+wrong when the incremented field is MAX_ID (2^21 - 1): the spill bit lands
+on an already-set bit of the field above (``|`` cannot carry), silently
+emptying the range, and a leading field wraps int64 negative. probe_ranges
+and row_range now use saturating ``lo + (1 << shift)`` arithmetic
+(plan.next_prefix); these tests pin ids 0, MAX_ID - 1, and MAX_ID.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Pattern, build_store, execute_local, execute_oracle
+from repro.core.bgp import rows_set
+from repro.core.plan import make_plan, next_prefix, probe_ranges, row_range
+from repro.core.rdf import BITS, INF_KEY, MAX_ID, pack3
+
+EDGE_IDS = [0, MAX_ID - 1, MAX_ID]
+
+
+def _ranges(pattern, table=None, domain=()):
+    plan = make_plan(pattern, domain)
+    t = table if table is not None else jnp.zeros((1, len(domain)), jnp.int32)
+    lo, hi = probe_ranges(plan, t)
+    return plan, np.asarray(lo), np.asarray(hi)
+
+
+@pytest.mark.parametrize("v", EDGE_IDS)
+def test_prefix1_range_covers_field(v):
+    _, lo, hi = _ranges(Pattern(v, "?p", "?o"))
+    assert hi[0] > lo[0] >= 0
+    # every key with this subject is inside, the next subject's keys are not
+    assert lo[0] <= int(pack3(np.int64(v), np.int64(0), np.int64(0)))
+    # ... except the all-MAX key == INF_KEY, the unstorable padding sentinel
+    assert int(pack3(np.int64(v), np.int64(MAX_ID),
+                     np.int64(MAX_ID - 1))) < hi[0]
+    if v < MAX_ID:
+        assert int(pack3(np.int64(v + 1), np.int64(0), np.int64(0))) >= hi[0]
+    else:
+        assert hi[0] == INF_KEY  # saturated exclusive bound
+
+
+@pytest.mark.parametrize("v1", EDGE_IDS)
+@pytest.mark.parametrize("v0", [0, 5, MAX_ID])  # odd v0 hit the old | no-op
+def test_prefix2_range_covers_field(v0, v1):
+    _, lo, hi = _ranges(Pattern(v0, v1, "?o"))
+    assert hi[0] > lo[0] >= 0
+    top = MAX_ID - 1 if (v0, v1) == (MAX_ID, MAX_ID) else MAX_ID
+    assert int(pack3(np.int64(v0), np.int64(v1), np.int64(top))) < hi[0]
+    if (v0, v1) != (MAX_ID, MAX_ID):
+        nxt = (v0, v1 + 1) if v1 < MAX_ID else (v0 + 1, 0)
+        assert int(pack3(np.int64(nxt[0]), np.int64(nxt[1]),
+                         np.int64(0))) >= hi[0]
+
+
+@pytest.mark.parametrize("v", EDGE_IDS)
+def test_prefix3_range_is_point(v):
+    _, lo, hi = _ranges(Pattern(v, v, v))
+    if v == MAX_ID:
+        assert hi[0] == INF_KEY  # 2^63 - 1 saturates; still exclusive-covers
+    else:
+        assert hi[0] == lo[0] + 1
+
+
+@pytest.mark.parametrize("v", EDGE_IDS)
+def test_row_range_boundary(v):
+    table = jnp.asarray([[v]], jnp.int32)
+    plan = make_plan(Pattern("?y", 9, "?z"), ("?y",))
+    lo, hi = row_range(plan, table)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    assert hi[0] > lo[0]
+    assert int(pack3(np.int64(v), np.int64(MAX_ID),
+                     np.int64(MAX_ID - 1))) < hi[0]
+
+
+def test_next_prefix_saturates_only_on_overflow():
+    lo = jnp.asarray([0, MAX_ID << (2 * BITS)], jnp.int64)
+    hi = np.asarray(next_prefix(lo, 2 * BITS))
+    assert hi[0] == 1 << (2 * BITS)
+    assert hi[1] == INF_KEY
+
+
+@pytest.mark.parametrize("v", EDGE_IDS)
+def test_scan_finds_boundary_subject(v):
+    tr = np.asarray([[v, 7, 3], [v, 8, 4], [(v + 1) % MAX_ID, 7, 5]],
+                    np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern(v, "?p", "?o")]
+    bnd = execute_local(store, pats)
+    got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+    want, ovars = execute_oracle(tr, pats)
+    perm = [bnd.vars.index(x) for x in ovars]
+    assert {tuple(r[i] for i in perm) for r in got} == want
+    assert len(want) == 2
+
+
+def test_inf_key_collision_guarded():
+    """The one triple that packs to the INF_KEY padding sentinel is rejected
+    at load, and dictionary encoding can never produce it (id MAX_ID is
+    reserved) — so 'real keys < INF_KEY' is an enforced invariant, not an
+    assumption."""
+    from repro.core.rdf import Dictionary
+    with pytest.raises(ValueError):
+        build_store(np.asarray([[MAX_ID, MAX_ID, MAX_ID]], np.int32), 1)
+    d = Dictionary()
+    d._bwd = ["t"] * MAX_ID                 # ids 0..MAX_ID-1 all assigned
+    with pytest.raises(ValueError):
+        d.id("one-term-too-many")
+
+
+def test_join_probe_at_boundary():
+    """A cascade whose probe key is MAX_ID: the old hi wrapped negative and
+    the GET came back empty."""
+    tr = np.asarray([[1, 7, MAX_ID], [MAX_ID, 9, 4], [2, 7, 3], [3, 9, 6]],
+                    np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 7, "?y"), Pattern("?y", 9, "?z")]
+    bnd = execute_local(store, pats)
+    got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+    want, ovars = execute_oracle(tr, pats)
+    perm = [bnd.vars.index(x) for x in ovars]
+    assert {tuple(r[i] for i in perm) for r in got} == want
+    assert (1, MAX_ID, 4) in want

@@ -14,6 +14,8 @@ from repro.core import (ExecConfig, build_store, execute_local,
                         execute_oracle, query_traffic, rows_set)
 from repro.data import lubm_like, sp2b_like
 
+pytestmark = pytest.mark.slow  # minutes: every query x both engines x oracle
+
 # probe_cap must cover the fattest GET (a department's ~120 members)
 CFG = ExecConfig(scan_cap=1 << 15, out_cap=1 << 15, probe_cap=256, row_cap=64)
 
