@@ -1,0 +1,287 @@
+"""Serving throughput: batched ServeEngine vs the sequential loop.
+
+The paper's workload IS query serving; this harness measures the layer
+PR 3 adds on top of the probe engine. An open-loop Poisson stream of
+mixed LUBM + SP²Bench queries (each a template with randomized
+constants — the many-tenant shape a production front door sees) runs
+through two tenants' ServeEngines (shape-bucketing batcher) and through
+the sequential one-query-at-a-time `execute_local` loop, on a virtual
+clock driven by measured wall times:
+
+  saturated — all requests queued, drained at max_batch: the raw
+              queries/sec capacity comparison (the >= 3x acceptance
+              gate, recorded as `speedup`), avg batch >= 8;
+  poisson   — arrivals at 1.5x the sequential engine's measured
+              capacity: p50/p99 latency at a load the sequential loop
+              cannot sustain (its queue grows all run) while the
+              batcher absorbs it with moderate batches;
+  coldstart — first-contact cost: the sequential loop compiles one
+              cascade PER DISTINCT QUERY (constants are baked into the
+              plan), the engine one per (template, batch-shape).
+
+Every batched result is verified bit-identical (row set) to
+`execute_local` on the same (patterns, cfg); each distinct template
+shape is additionally verified against `execute_oracle` on a small
+instance (the oracle is O(N) python per binding — too slow at bench
+scale). Stream shapes are the selective serving-style queries; the
+broad class scans (LUBM Q6/Q14, SP²B Q2) are batch-analytics, not
+request traffic.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import (ExecConfig, build_store, execute_local,
+                        execute_oracle, rows_set)
+from repro.core.bgp import order_patterns
+from repro.data import lubm_like, sp2b_like
+from repro.serve import EngineBusy, ServeEngine
+
+CFG = ExecConfig(out_cap=128, probe_cap=32, row_cap=16)
+
+N_DEPT, N_PROF, N_COURSE = 12, 18, 24     # rdf_gen.lubm_like constants
+
+
+def _lubm_shapes(d, n_univ, rng):
+    """(name, weight, sampler) — samplers draw random constants."""
+    p = d.pattern
+    u = lambda: rng.randint(n_univ)
+    return [
+        ("lubm_q1", 3, lambda: (lambda uu, dd: [
+            p("?x", "rdf:type", "GraduateStudent"),
+            p("?x", "takesCourse",
+              f"Course{rng.randint(N_COURSE)}.D{dd}.U{uu}")])(
+                  u(), rng.randint(N_DEPT))),
+        ("lubm_q3", 3, lambda: (lambda uu, dd: [
+            p("?x", "rdf:type", "Publication"),
+            p("?x", "publicationAuthor",
+              f"Prof{rng.randint(N_PROF)}.D{dd}.U{uu}")])(
+                  u(), rng.randint(N_DEPT))),
+        ("lubm_q5", 3, lambda: [
+            p("?x", "rdf:type", "Student"),
+            p("?x", "memberOf", f"Dept{rng.randint(N_DEPT)}.U{u()}")]),
+        ("lubm_q13", 3, lambda: [
+            p("?p", "worksFor", f"Dept{rng.randint(N_DEPT)}.U{u()}"),
+            p("?x", "advisor", "?p")]),
+        ("lubm_q7", 2, lambda: (lambda uu, dd: [
+            p("?y", "rdf:type", "Course"),
+            p(f"Prof{rng.randint(N_PROF)}.D{dd}.U{uu}", "teacherOf", "?y"),
+            p("?x", "takesCourse", "?y"),
+            p("?x", "rdf:type", "Student")])(u(), rng.randint(N_DEPT))),
+        ("lubm_q11", 1, lambda: [
+            p("?x", "rdf:type", "ResearchGroup"),
+            p("?x", "subOrganizationOf", f"Univ{u()}")]),
+        ("lubm_q4star", 2, lambda: (lambda uu, dd: [
+            p("?x", "rdf:type", "Professor"),
+            p("?x", "worksFor", f"Dept{dd}.U{uu}"),
+            p("?x", "name", "?y1"),
+            p("?x", "emailAddress", "?y2"),
+            p("?x", "telephone", "?y3")])(u(), rng.randint(N_DEPT))),
+    ]
+
+
+def _sp2b_shapes(d, n_articles, rng):
+    p = d.pattern
+    n_persons = max(n_articles // 3, 8)
+    return [
+        ("sp2b_title", 3, lambda: [
+            p("?a", "rdf:type", "Article"),
+            p("?a", "dc:title", f"title{2 * rng.randint(n_articles // 2)}"),
+            p("?a", "dcterms:issued", "?yr")]),
+        ("sp2b_author", 3, lambda: [
+            p("?a", "dc:creator", f"Person{rng.randint(n_persons)}"),
+            p("?a", "dc:title", "?t")]),
+        ("sp2b_person", 3, lambda: [
+            p("?s", "?pr", f"Person{rng.randint(n_persons)}")]),
+    ]
+
+
+def _gen_stream(tenants, n_requests, rng):
+    """Mixed request stream: (tenant, shape name, patterns) per request."""
+    choices = [(t, name, fn) for t, shapes in tenants.items()
+               for name, w, fn in shapes for _ in range(w)]
+    return [(lambda t, name, fn: (t, name, fn()))(*choices[rng.randint(
+        len(choices))]) for _ in range(n_requests)]
+
+
+def _block(bnd):
+    jax.block_until_ready((bnd.table, bnd.valid, bnd.overflow))
+    return bnd
+
+
+def _run_sequential(stores, reqs, arrivals):
+    """FIFO one-at-a-time loop on a virtual clock; returns (lat, makespan)."""
+    now, lat = 0.0, []
+    for (tenant, _, pats), arr in zip(reqs, arrivals):
+        start = max(now, arr)
+        t0 = time.perf_counter()
+        _block(execute_local(stores[tenant], pats, "mapsin", CFG))
+        now = start + (time.perf_counter() - t0)
+        lat.append(now - arr)
+    return lat, now
+
+
+def _run_batched(engines, reqs, arrivals, max_queue_shed=False):
+    """Open-loop replay through the shape-bucketing engines; returns
+    (lat, makespan, shed). The engine with the deepest queue steps."""
+    now, i, shed = 0.0, 0, 0
+    lat = []
+    arr_of = {}
+    n = len(reqs)
+    while len(lat) + shed < n:
+        while i < n and arrivals[i] <= now:
+            tenant, _, pats = reqs[i]
+            try:
+                rid = engines[tenant].submit(pats, arrival=arrivals[i])
+                arr_of[(tenant, rid)] = arrivals[i]
+            except EngineBusy:         # admission control: load shed (503)
+                if not max_queue_shed:
+                    raise
+                shed += 1
+            i += 1
+        busiest = max(engines, key=lambda t: engines[t].pending())
+        if engines[busiest].pending() == 0:
+            if i < n:
+                now = max(now, arrivals[i])
+                continue
+            break
+        t0 = time.perf_counter()
+        results = engines[busiest].step()
+        now += time.perf_counter() - t0
+        for r in results:
+            lat.append(now - arr_of[(busiest, r.request_id)])
+    return lat, now, shed
+
+
+def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
+         max_batch=16, seed=0, oracle=True):
+    rng = np.random.RandomState(seed)
+    lt, ld, _ = lubm_like(lubm_scale)
+    st, sd, _ = sp2b_like(sp2b_scale)
+    stores = {"lubm": build_store(lt, 1), "sp2b": build_store(st, 1)}
+    dicts = {"lubm": ld, "sp2b": sd}
+    triples = {"lubm": lt, "sp2b": st}
+    shapes = {"lubm": _lubm_shapes(ld, lubm_scale, rng),
+              "sp2b": _sp2b_shapes(sd, sp2b_scale, rng)}
+    reqs = _gen_stream(shapes, n_requests, rng)
+    tag = f"lubm{lubm_scale}_sp2b{sp2b_scale}"
+
+    def fresh_engines():
+        # compile cache must hold every (template, pow2-batch) pair or the
+        # timed phases would re-pay compiles on eviction
+        return {t: ServeEngine(stores[t], dicts[t], CFG, max_batch=max_batch,
+                               max_queue=4 * n_requests,
+                               compile_cache_size=64)
+                for t in stores}
+
+    # --- cold start (compiles included), then warm both paths -------------
+    engines = fresh_engines()
+    zero = [0.0] * n_requests
+    t0 = time.perf_counter()
+    _run_batched(engines, reqs, zero)
+    cold_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _run_sequential(stores, reqs, zero)
+    cold_seq = time.perf_counter() - t0
+    # deterministic warm-up: every template at every pow2 batch shape, so
+    # neither timed phase below ever waits on a compile (a deployment
+    # would do this from a traffic log at startup — ServeEngine.precompile)
+    for tenant, _, pats in reqs:
+        engines[tenant].precompile(pats)
+
+    # --- saturated throughput (the >= 3x acceptance gate) -----------------
+    # wall clock around BOTH loops, so python-side scheduling overhead is
+    # charged to the engine that incurs it
+    d0 = engines["lubm"].dispatches + engines["sp2b"].dispatches
+    t0 = time.perf_counter()
+    _run_batched(engines, reqs, zero)
+    sat_batched = time.perf_counter() - t0
+    dispatches = engines["lubm"].dispatches + engines["sp2b"].dispatches - d0
+    t0 = time.perf_counter()
+    _run_sequential(stores, reqs, zero)
+    sat_seq = time.perf_counter() - t0
+    qps_b, qps_s = n_requests / sat_batched, n_requests / sat_seq
+    avg_batch = n_requests / max(dispatches, 1)
+
+    # --- verification: every request vs execute_local; shapes vs oracle ---
+    engines_v = fresh_engines()
+    rid_to_req = {}
+    for (tenant, name, pats), _ in zip(reqs, zero):
+        rid = engines_v[tenant].submit(pats)
+        rid_to_req[(tenant, rid)] = (tenant, name, pats)
+    results = {t: {} for t in engines_v}
+    for t, eng in engines_v.items():
+        for r in eng.drain():
+            results[t][r.request_id] = r
+    verified = 0
+    local_cache = {}
+    for (tenant, rid), (t, name, pats) in rid_to_req.items():
+        key = (tenant, tuple(pats))
+        if key not in local_cache:
+            bnd = execute_local(stores[tenant], pats, "mapsin", CFG)
+            local_cache[key] = (rows_set(bnd.table, bnd.valid, len(bnd.vars)),
+                                tuple(bnd.vars))
+        want, vars_ = local_cache[key]
+        got = results[tenant][rid]
+        assert got.rows_set(vars_) == want, (tenant, name, pats)
+        verified += 1
+    verified_oracle = 0
+    if oracle:
+        vs = {"lubm": lubm_like(1), "sp2b": sp2b_like(300)}
+        orng = np.random.RandomState(seed + 1)
+        vshapes = {t: _lubm_shapes(vs[t][1], 1, orng) if t == "lubm"
+                   else _sp2b_shapes(vs[t][1], 300, orng) for t in vs}
+        for t, shp in vshapes.items():
+            tr_v, d_v, _ = vs[t]
+            store_v = build_store(tr_v, 1)
+            eng_v = ServeEngine(store_v, d_v, CFG, max_batch=max_batch)
+            for name, _, fn in shp:
+                pats = fn()
+                res = eng_v.execute([pats])[0]
+                # ordered patterns: same result set, tractable oracle
+                want, ovars = execute_oracle(
+                    tr_v, order_patterns(pats, store=store_v))
+                assert res.rows_set(ovars) == want, (t, name)
+                verified_oracle += 1
+
+    emit(f"bench_serving/saturated_{tag},{sat_batched / n_requests * 1e6:.0f},"
+         f"qps_batched={qps_b:.0f};qps_seq={qps_s:.0f};"
+         f"speedup={qps_b / qps_s:.2f};avg_batch={avg_batch:.1f};"
+         f"dispatches={dispatches};n={n_requests};"
+         f"verified_local={verified};verified_oracle={verified_oracle}")
+
+    # --- open-loop Poisson at 1.5x the sequential engine's capacity -------
+    # a load the one-at-a-time loop cannot sustain (its queue grows for
+    # the whole run) while the batcher absorbs it with moderate batches;
+    # note an open-loop batcher's capacity is batch-size dependent, so
+    # rates near qps_batched (which assumes full batches) also saturate
+    rate = 1.5 * qps_s
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)).tolist()
+    # untimed replay first: an arrival trickle dispatches small batch
+    # shapes (1/2/4/...) the saturated phase never compiled; the timed
+    # replay below then measures steady-state latency, not compiles
+    _run_batched(engines, reqs, arrivals, max_queue_shed=True)
+    lat_b, _, shed = _run_batched(engines, reqs, arrivals,
+                                  max_queue_shed=True)
+    lat_s, _ = _run_sequential(stores, reqs, arrivals)
+    p = lambda xs, q: float(np.percentile(np.asarray(xs) * 1e3, q))
+    emit(f"bench_serving/poisson_{tag},{p(lat_b, 99) * 1e3:.0f},"
+         f"rate_qps={rate:.0f};p50_ms_batched={p(lat_b, 50):.2f};"
+         f"p99_ms_batched={p(lat_b, 99):.2f};p50_ms_seq={p(lat_s, 50):.2f};"
+         f"p99_ms_seq={p(lat_s, 99):.2f};shed={shed}")
+
+    emit(f"bench_serving/coldstart_{tag},{cold_batched * 1e6:.0f},"
+         f"cold_s_batched={cold_batched:.2f};cold_s_seq={cold_seq:.2f};"
+         f"cold_speedup={cold_seq / cold_batched:.2f};"
+         f"distinct_queries={len(local_cache)}")
+    return qps_b / qps_s
+
+
+if __name__ == "__main__":
+    from benchmarks.run import run_suite
+    import benchmarks.bench_serving as mod
+    run_suite("serving", mod)

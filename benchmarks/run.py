@@ -9,6 +9,8 @@ perf trajectory with a plain ``git diff`` / ``jq``:
   bench_multiway     — paper Fig 6 / §4.3 (star-join single-GET optimization)
   bench_selectivity  — paper §5 analysis (win grows with selectivity)
   bench_kernels      — kernel hot-spot microbenches
+  bench_serving      — serving layer (DESIGN.md §5): batched engine
+                       throughput/latency vs the sequential loop
 
 ``python -m benchmarks.run --smoke`` (or ``python -m benchmarks.smoke``)
 runs every suite at minimal scale as a crash canary; see smoke.py.
@@ -72,13 +74,15 @@ def main() -> None:
         from benchmarks import smoke
         raise SystemExit(smoke.main())
     from benchmarks import (bench_distributed, bench_kernels, bench_loading,
-                            bench_multiway, bench_queries, bench_selectivity)
+                            bench_multiway, bench_queries, bench_selectivity,
+                            bench_serving)
     mods = {
         "loading": bench_loading,
         "queries": bench_queries,
         "multiway": bench_multiway,
         "selectivity": bench_selectivity,
         "kernels": bench_kernels,
+        "serving": bench_serving,
         "distributed": bench_distributed,
     }
     only = args[0] if args else None

@@ -20,7 +20,7 @@ import traceback
 
 def main() -> int:
     from benchmarks import (bench_kernels, bench_loading, bench_multiway,
-                            bench_queries, bench_selectivity)
+                            bench_queries, bench_selectivity, bench_serving)
     import dataclasses
     small_mw = dataclasses.replace(bench_multiway.CFG, out_cap=1 << 12,
                                    scan_cap=1 << 12, row_cap=16)
@@ -36,6 +36,9 @@ def main() -> int:
             emit=emit, n=20_000)),
         ("kernels", lambda emit: bench_kernels.main(
             emit=emit, sizes=((1 << 12, 1 << 8),))),
+        ("serving", lambda emit: bench_serving.main(
+            emit=emit, lubm_scale=1, sp2b_scale=300, n_requests=12,
+            max_batch=8, oracle=False)),
     ]
     failures = []
     for name, fn in suites:

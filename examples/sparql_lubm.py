@@ -1,9 +1,19 @@
 """End-to-end driver (the paper's kind of workload = query serving):
-generate a LUBM-like dataset, execute the paper's benchmark queries with
+generate a LUBM-like dataset, pose the paper's benchmark queries AS
+SPARQL TEXT through the serve front-end (serve/sparql.py), execute with
 both engines, verify against the oracle, print the comparison table.
 
     PYTHONPATH=src python examples/sparql_lubm.py [n_universities]
+    PYTHONPATH=src python examples/sparql_lubm.py 1 --sparql \\
+        'SELECT ?x WHERE { ?x a <Professor> . ?x <worksFor> <Dept0.U0> . }'
+
+With --sparql the given query (text or a path to a .rq/.sparql file) is
+parsed, executed, and its rows printed with dictionary-decoded terms.
+Without it, every built-in query runs from its text form in
+data/rdf_gen.py:LUBM_SPARQL — the front-end is on the path, not beside
+it (each parse is also asserted equal to the hand-built Pattern list).
 """
+import os
 import sys
 import time
 
@@ -12,16 +22,46 @@ import jax
 from repro.core import (ExecConfig, build_store, execute_local,
                         execute_oracle, query_traffic, rows_set)
 from repro.data import lubm_like
+from repro.data.rdf_gen import LUBM_SPARQL
+from repro.serve import parse_bgp
 
-n_univ = int(sys.argv[1]) if len(sys.argv) > 1 else 1
-triples, d, queries = lubm_like(n_univ)
+args = sys.argv[1:]
+sparql_text = None
+if "--sparql" in args:
+    i = args.index("--sparql")
+    if i + 1 >= len(args):
+        sys.exit("usage: sparql_lubm.py [n_universities] "
+                 "[--sparql QUERY_TEXT_OR_FILE]")
+    sparql_text = args[i + 1]
+    args = args[:i] + args[i + 2:]
+    if os.path.exists(sparql_text):
+        with open(sparql_text) as f:
+            sparql_text = f.read()
+n_univ = int(args[0]) if args else 1
+
+triples, d, hand_built = lubm_like(n_univ)
 print(f"LUBM-like x{n_univ}: {len(triples):,} triples, {len(d):,} terms")
 store = build_store(triples, num_shards=1)
-cfg = ExecConfig(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=16, row_cap=64)
+# probe_cap must hold Q8's memberOf fan-out (120 students per department);
+# at 16 the probe truncates (surfaced as overflow) and Q8 reported inexact
+cfg = ExecConfig(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=128, row_cap=64)
+
+if sparql_text is not None:
+    pq = parse_bgp(sparql_text, d)           # ValueError on bad input
+    bnd = execute_local(store, list(pq.patterns), "mapsin", cfg)
+    got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+    sel = [bnd.vars.index(v) for v in pq.select]
+    print("  ".join(pq.select))
+    for row in sorted(got):
+        print("  ".join(d.term(row[i]) for i in sel))
+    print(f"-- {len(got)} rows, overflow={int(bnd.overflow)}")
+    sys.exit(0)
 
 print(f"{'query':6s} {'rows':>6s} {'mapsin':>9s} {'reduce':>9s} "
       f"{'speedup':>8s} {'net-ratio':>9s}  exact")
-for qname, pats in queries.items():
+for qname, text in LUBM_SPARQL.items():
+    pats = list(parse_bgp(text, d).patterns)     # the front-end is the path
+    assert pats == hand_built[qname], f"{qname}: text form drifted"
     times = {}
     for mode in ("mapsin", "reduce"):
         fn = lambda m=mode: execute_local(store, pats, m, cfg)

@@ -46,8 +46,11 @@ class ExecConfig:
     routing: str = "broadcast"   # dist_probe collective: broadcast | a2a
                                  # (a2a = point-to-point region routing)
     a2a_bucket_cap: int = 0      # per-destination probe bucket capacity for
-                                 # routing="a2a"; 0 = auto (2x uniform
-                                 # share), out_cap = drop-free guarantee
+                                 # routing="a2a"; 0 = auto-tune from the
+                                 # measured probe->region fan-out
+                                 # (tune_a2a_bucket_cap; static 2x-uniform
+                                 # share for direct dist_probe callers),
+                                 # out_cap = drop-free guarantee
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,10 +291,12 @@ def _route_splits(store: TripleStore, index: int, s: int) -> np.ndarray:
 
 
 def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
-                  whole_row: bool = False) -> int:
-    """Measured routing fan-out: total (probe, region) deliveries if each
-    probe were routed only to shards whose key range it intersects — the
-    paper's region-server GET, vs the broadcast's n_in * S."""
+                  whole_row: bool = False) -> tuple[int, int]:
+    """Measured routing fan-out if each probe were routed only to shards
+    whose key range it intersects — the paper's region-server GET, vs the
+    broadcast's n_in * S. Returns (total deliveries, max per-region load);
+    the max is what sizes the a2a per-destination probe buckets
+    (tune_a2a_bucket_cap)."""
     from repro.core.plan import probe_ranges, row_range
     lo, hi = (row_range if whole_row else probe_ranges)(plan, bnd.table)
     lo, hi = np.asarray(lo), np.asarray(hi)
@@ -300,7 +305,8 @@ def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
     from repro.core.triple_store import range_intersects_region
     hits = range_intersects_region(lo[:, None], hi[:, None],
                                    splits[None, :-1], splits[None, 1:])
-    return int(hits[valid].sum())
+    per_region = hits[valid].sum(axis=0)
+    return int(per_region.sum()), int(per_region.max(initial=0))
 
 
 def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
@@ -315,17 +321,18 @@ def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
                   "n_patterns": 1})
     for st in steps[1:]:
         n_in, nv_in = int(bnd.count()), len(bnd.vars)
-        deliveries = 0
+        deliveries = max_region = 0
         if mode == "mapsin":
             keys = keys_of(st.patterns[0], bnd.vars)
             plan0 = make_plan(st.patterns[0], bnd.vars)
             if st.kind == "multiway":
-                deliveries = _probe_fanout(store, plan0, bnd, s_route,
-                                           whole_row=True)
+                deliveries, max_region = _probe_fanout(store, plan0, bnd,
+                                                       s_route, whole_row=True)
                 bnd = ms.multiway_step(bnd, st.patterns, keys, cfg.row_cap,
                                        cfg.out_cap, cfg.impl)
             else:
-                deliveries = _probe_fanout(store, plan0, bnd, s_route)
+                deliveries, max_region = _probe_fanout(store, plan0, bnd,
+                                                       s_route)
                 bnd = ms.mapsin_step(bnd, st.patterns[0], keys, cfg.probe_cap,
                                      cfg.out_cap, cfg.impl)
         else:
@@ -341,8 +348,46 @@ def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
         stats.append({"kind": st.kind, "n_in": n_in,
                       "n_out": int(bnd.count()), "nv": nv_in,
                       "relation": rel, "n_patterns": len(st.patterns),
-                      "deliveries": deliveries, "route_shards": s_route})
+                      "deliveries": deliveries, "route_shards": s_route,
+                      "deliveries_max_region": max_region})
     return bnd
+
+
+def tune_a2a_bucket_cap(store: TripleStore, patterns: Sequence[Pattern],
+                        cfg: ExecConfig, num_shards: int) -> int:
+    """Measured per-destination probe-bucket capacity for routing="a2a".
+
+    Runs the query once instrumented (host-side, cached per
+    (patterns, cfg, S) in the store's plan cache) and sizes the bucket to
+    the MAX per-region probe load any join step actually delivers —
+    exact for this (query, store, splits) since the fan-out accounting
+    and the a2a dispatch share range_intersects_region and the same
+    region boundaries, PROVIDED the tuning run saw the full binding
+    multiset. Replaces the static 2x-uniform-share default
+    (auto_bucket_cap), which over-allocates selective queries by orders
+    of magnitude and under-allocates heavy skew. `out_cap` stays the
+    drop-free fallback: it bounds the result (a shard never routes more
+    probes than it has bindings) and is returned when nothing was
+    measurable (a single-step scan that never probes) or when the tuning
+    run OVERFLOWED — the sharded run keeps out_cap rows PER SHARD, so a
+    truncated single-store measurement would under-size the buckets and
+    drop probes the static default delivered."""
+    ck = ("a2a_tune", tuple(patterns), cfg, num_shards)
+    hit = store.plan_cache.get(ck)
+    if hit is not None:
+        return hit
+    stats: list = []
+    tune_cfg = dataclasses.replace(cfg, route_shards=num_shards,
+                                   routing="broadcast", a2a_bucket_cap=0)
+    bnd = execute_local(store, patterns, "mapsin", tune_cfg, stats=stats)
+    loads = [st["deliveries_max_region"] for st in stats
+             if st["kind"] != "scan" and "deliveries_max_region" in st]
+    if not loads or int(np.asarray(bnd.overflow)) > 0:
+        cap = cfg.out_cap
+    else:
+        cap = min(max(max(loads), 8), cfg.out_cap)
+    store.plan_cache[ck] = cap
+    return cap
 
 
 def query_traffic_actual(stats: list, mode: str, num_shards: int,
@@ -455,9 +500,19 @@ def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
     only ranges intersecting its slice; with "a2a" each probe record is
     shipped point-to-point to exactly the intersecting shards
     (dist._dist_probe_a2a). `routing` overrides cfg.routing when given.
-    Returns (table (S*cap, nv), valid, overflow (S,), vars)."""
+    Returns (table (S*cap, nv), valid, overflow (S,), vars).
+
+    With routing == "a2a" and cfg.a2a_bucket_cap == 0 the per-destination
+    probe buckets are auto-tuned from the MEASURED probe->region fan-out
+    (tune_a2a_bucket_cap) instead of the static 2x-uniform-share
+    heuristic — the ROADMAP open item; pass a positive a2a_bucket_cap
+    (e.g. out_cap for the drop-free guarantee) to override."""
     if routing is not None:
         cfg = dataclasses.replace(cfg, routing=routing)
+    if cfg.routing == "a2a" and cfg.a2a_bucket_cap == 0 and mode == "mapsin":
+        tuned = tune_a2a_bucket_cap(store, patterns, cfg,
+                                    int(mesh.shape[axis]))
+        cfg = dataclasses.replace(cfg, a2a_bucket_cap=tuned)
     steps = plan_steps(patterns, cfg, store)
     # derive final var order (static)
     domain: list[str] = []

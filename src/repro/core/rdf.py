@@ -94,6 +94,13 @@ class Dictionary:
     def term(self, i: int) -> str:
         return self._bwd[i]
 
+    def lookup(self, term: str) -> int | None:
+        """Read-only id lookup (None when absent). Query parsing must NOT
+        mint ids: a constant unknown to the data is a parse-time error,
+        not a fresh dictionary entry (which would silently match nothing
+        and grow the dictionary under adversarial query streams)."""
+        return self._fwd.get(term)
+
     def __len__(self) -> int:
         return len(self._bwd)
 

@@ -16,6 +16,7 @@ statically shaped (TPU requirement).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +25,41 @@ from repro.common import ceil_div
 from repro.core.rdf import INF_KEY, pack3
 
 SPO, OPS = 0, 1  # index ids (paper Table 3 chooses between them per pattern)
+
+PLAN_CACHE_SIZE = 512  # default plan_cache bound (entries, not bytes)
+
+
+class LRUCache(OrderedDict):
+    """Dict with least-recently-used eviction — bounds the per-store
+    plan/compile cache (and the serving layer's per-engine compile cache)
+    so a many-tenant query stream can't grow host memory forever.
+
+    Reads (`[]` / `get`) refresh recency; writes evict the coldest entry
+    once `maxsize` is exceeded. Evicting a compiled cascade only costs a
+    re-trace on the next miss — never correctness.
+    """
+
+    def __init__(self, maxsize: int = PLAN_CACHE_SIZE):
+        super().__init__()
+        if maxsize < 1:
+            raise ValueError("LRUCache needs maxsize >= 1")
+        self.maxsize = maxsize
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        self.move_to_end(key)
+        return val
+
+    def get(self, key, default=None):
+        if key in self:
+            return self[key]
+        return default
+
+    def __setitem__(self, key, val):
+        super().__setitem__(key, val)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            del self[next(iter(self))]    # coldest (front) entry
 
 
 @dataclasses.dataclass
@@ -39,9 +75,12 @@ class TripleStore:
     n_triples: int
     # host-side memo: flattened keys, measured cardinalities, ordered step
     # plans and compiled cascades keyed by (patterns, cfg) — keeps repeated
-    # query execution off the eager-dispatch path (core/bgp.py)
-    plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
-                                         compare=False)
+    # query execution off the eager-dispatch path (core/bgp.py). LRU-bounded:
+    # under a many-tenant query stream the per-(patterns, cfg) entries would
+    # otherwise accumulate forever; hot entries stay resident, cold ones
+    # re-trace on their next use.
+    plan_cache: LRUCache = dataclasses.field(
+        default_factory=LRUCache, repr=False, compare=False)
 
     @property
     def num_shards(self) -> int:

@@ -113,6 +113,56 @@ def lubm_like(n_universities: int, seed: int = 0):
     return triples, d, queries
 
 
+# SPARQL text forms of the LUBM query set (serve/sparql.py round-trips
+# these to exactly the hand-built Pattern lists above; constants are
+# scale-independent — Dept0/Univ0/... exist at every n_universities >= 1)
+_LUBM_HDR = "PREFIX rdf: <rdf:>\n"
+LUBM_SPARQL = {
+    "Q1": _LUBM_HDR + """SELECT ?x WHERE {
+  ?x rdf:type <GraduateStudent> .
+  ?x <takesCourse> <Course0.D0.U0> .
+}""",
+    "Q3": _LUBM_HDR + """SELECT ?x WHERE {
+  ?x rdf:type <Publication> .
+  ?x <publicationAuthor> <Prof2.D0.U0> .
+}""",
+    "Q4": _LUBM_HDR + """SELECT ?x ?y1 ?y2 ?y3 WHERE {
+  ?x rdf:type <Professor> .
+  ?x <worksFor> <Dept0.U0> .
+  ?x <name> ?y1 .
+  ?x <emailAddress> ?y2 .
+  ?x <telephone> ?y3 .
+}""",
+    "Q5": _LUBM_HDR + """SELECT ?x WHERE {
+  ?x rdf:type <Student> .
+  ?x <memberOf> <Dept0.U0> .
+}""",
+    "Q6": _LUBM_HDR + "SELECT ?x WHERE { ?x rdf:type <Student> . }",
+    "Q7": _LUBM_HDR + """SELECT ?x ?y WHERE {
+  ?y rdf:type <Course> .
+  <Prof1.D0.U0> <teacherOf> ?y .
+  ?x <takesCourse> ?y .
+  ?x rdf:type <Student> .
+}""",
+    "Q8": _LUBM_HDR + """SELECT ?x ?y ?z WHERE {
+  ?y rdf:type <Department> .
+  ?y <subOrganizationOf> <Univ0> .
+  ?x <memberOf> ?y .
+  ?x rdf:type <Student> .
+  ?x <emailAddress> ?z .
+}""",
+    "Q11": _LUBM_HDR + """SELECT ?x WHERE {
+  ?x rdf:type <ResearchGroup> .
+  ?x <subOrganizationOf> <Univ0> .
+}""",
+    "Q13": _LUBM_HDR + """SELECT ?p ?x WHERE {
+  ?p <worksFor> <Dept0.U0> .
+  ?x <advisor> ?p .
+}""",
+    "Q14": _LUBM_HDR + "SELECT * WHERE { ?x a <UndergraduateStudent> . }",
+}
+
+
 def sp2b_like(n_articles: int, seed: int = 0):
     rng = np.random.RandomState(seed)
     d = Dictionary()
@@ -165,3 +215,38 @@ def sp2b_like(n_articles: int, seed: int = 0):
         "Q10": [q("?s", "?pr", "Person0")],
     }
     return triples, d, queries
+
+
+# SPARQL text forms of the SP²Bench query set (same round-trip contract
+# as LUBM_SPARQL; the generator names its prefixes literally — e.g. the
+# term "dc:title" — so each prefix maps to its own name + ':')
+_SP2B_HDR = """PREFIX rdf: <rdf:>
+PREFIX dc: <dc:>
+PREFIX dcterms: <dcterms:>
+PREFIX bench: <bench:>
+PREFIX rdfs: <rdfs:>
+PREFIX swrc: <swrc:>
+PREFIX foaf: <foaf:>
+"""
+SP2B_SPARQL = {
+    "Q1": _SP2B_HDR + """SELECT ?yr WHERE {
+  ?a rdf:type <Article> .
+  ?a dc:title "title0" .
+  ?a dcterms:issued ?yr .
+}""",
+    "Q2": _SP2B_HDR + """SELECT * WHERE {
+  ?p rdf:type <Inproceedings> .
+  ?p dc:creator ?author .
+  ?p bench:booktitle ?bt .
+  ?p dc:title ?title .
+  ?p dcterms:partOf ?proc .
+  ?p rdfs:seeAlso ?ee .
+  ?p swrc:pages ?pages .
+  ?p foaf:homepage ?url .
+}""",
+    "Q3a": _SP2B_HDR + """SELECT ?a WHERE {
+  ?a rdf:type <Article> .
+  ?a swrc:pages ?v .
+}""",
+    "Q10": "SELECT ?s ?pr WHERE { ?s ?pr <Person0> . }",
+}

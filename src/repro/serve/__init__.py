@@ -1,0 +1,6 @@
+"""Query serving subsystem (DESIGN.md §5): SPARQL BGP front-end +
+batched multi-query executor on top of the MAPSIN probe engine."""
+from repro.serve.sparql import ParsedQuery, parse_bgp  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    EngineBusy, QueryResult, ServeEngine, plan_signature,
+)

@@ -1,0 +1,400 @@
+"""Batched multi-query executor (DESIGN.md §5).
+
+The serving observation: a production query stream is many instances of
+FEW plan shapes — the same BGP template with different constants (every
+tenant asks "students of <their> department"). The engine exploits that:
+
+* ``plan_signature`` canonicalizes a planned query into a **template**
+  (variables renamed in first-occurrence order, every distinct constant
+  replaced by a pre-bound pseudo-variable slot ``?_kN``) plus the slot
+  value vector. Queries with equal templates differ only in constants.
+* The template cascade seeds the initial Bindings domain with the const
+  slots as already-bound columns, so the UNCHANGED core primitives
+  (``mapsin_step`` / ``multiway_step`` — ``make_plan`` resolves a slot
+  exactly like any bound variable) execute it; ``jax.vmap`` over the
+  slot vector + per-slot donated scratch Bindings turns one compiled
+  cascade into a whole batch of queries in ONE dispatch.
+* A shape-bucketing scheduler groups the mixed request stream by
+  template, pads each bucket to a power-of-two batch (bounded compile
+  shapes), runs one bucket per ``step()``, and applies admission
+  control: ``submit`` rejects with ``EngineBusy`` beyond ``max_queue``,
+  a dispatch takes at most ``max_batch`` requests. Compiled batched
+  cascades live in an ``LRUCache`` so a many-template tenant mix cannot
+  grow compile memory forever.
+
+Results are per-slot Bindings — bit-identical row sets to
+``execute_local`` on the same (patterns, cfg), which tests verify
+against ``execute_oracle`` as well. MAPSIN mode only: reduce-side
+re-scans relations with an empty domain, which a seeded-constant
+template cannot express.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapsin as ms
+from repro.core.bgp import ExecConfig, Step, plan_steps
+from repro.core.mapsin import Bindings, apply_residual, compact
+from repro.core.plan import make_plan, probe_ranges, residual_values
+from repro.core.rdf import Pattern, is_var, unpack3
+from repro.core.triple_store import LRUCache, TripleStore
+from repro.serve.sparql import ParsedQuery, parse_bgp
+
+
+class EngineBusy(RuntimeError):
+    """Admission control: the request queue is at max_queue depth."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Template:
+    """Canonical plan shape: steps over renamed variables + const slots."""
+    steps: tuple[Step, ...]
+    const_vars: tuple[str, ...]     # ("?_k0", ...) pre-bound slot columns
+
+    @property
+    def n_consts(self) -> int:
+        return len(self.const_vars)
+
+
+def plan_signature(store: TripleStore, patterns: Sequence[Pattern],
+                   cfg: ExecConfig, mode: str = "mapsin"):
+    """Plan the query, then canonicalize the ordered steps.
+
+    Returns ``(template, consts, var_order)``: the hashable Template (the
+    bucket key — equal templates share one compiled batched cascade), the
+    (n_consts,) int32 slot values, and the query's result variable order
+    (original names, exactly ``execute_local``'s order). Repeated
+    constants share a slot, which preserves multiway prefix[0] equality
+    in the template exactly as in the concrete plan."""
+    steps = tuple(plan_steps(patterns, cfg, store))
+    rename: dict[str, str] = {}
+    slots: dict[int, int] = {}
+    const_vals: list[int] = []
+
+    def sub(term):
+        if is_var(term):
+            if term not in rename:
+                rename[term] = f"?v{len(rename)}"
+            return rename[term]
+        cid = int(term)
+        if cid not in slots:
+            slots[cid] = len(const_vals)
+            const_vals.append(cid)
+        return f"?_k{slots[cid]}"
+
+    tsteps = tuple(
+        Step(st.kind, tuple(Pattern(sub(p.s), sub(p.p), sub(p.o))
+                            for p in st.patterns))
+        for st in steps)
+    var_order: list[str] = []
+    for st in steps:
+        for pat in st.patterns:
+            var_order.extend(make_plan(pat, var_order).out_var_names)
+    template = Template(tsteps, tuple(f"?_k{i}"
+                                      for i in range(len(const_vals))))
+    return template, np.asarray(const_vals, np.int32), tuple(var_order)
+
+
+def _seed_scan(pattern: Pattern, const_vars: tuple[str, ...],
+               keys: jnp.ndarray, consts: jnp.ndarray, out_cap: int,
+               impl: str, scratch: Bindings) -> Bindings:
+    """First-pattern scan with the constant slots as an already-bound
+    domain: ``scan_pattern`` generalized from an empty domain to a 1-row
+    seed table carrying the slot values. The scan range/residuals come
+    from the seed row; the output table carries the slot columns along
+    (broadcast) so every later step resolves them like bound variables.
+    ``scratch`` (per-slot, donated by the jitted batch) is consumed.
+
+    Fast path: a bound-prefix pattern with no residual filters is ONE
+    range GET (searchsorted + out_cap-window gather) instead of a full
+    pass over the key array — O(log N + cap) per batch slot, and
+    row-for-row identical to the full scan: without residuals both take
+    the first out_cap range entries in key order and surface the rest as
+    overflow. Residual/equality filters force the full-scan path, where
+    filtering must happen BEFORE the capacity cut — note that path
+    materializes an O(N) row table PER BATCH SLOT under vmap, so
+    scan-shaped first patterns are fine to serve occasionally but a
+    stream of them on a large store wants small batches (it is also the
+    one shape where batching buys nothing: the scan dominates)."""
+    plan = make_plan(pattern, const_vars)
+    seed = consts[None, :].astype(jnp.int32)           # (1, n_consts)
+    lo, hi = probe_ranges(plan, seed)
+    if plan.prefix and not plan.residual and not plan.eq_positions:
+        k, valid, missed = ms.gather_range(keys, lo, hi, out_cap, impl)
+        k, within = k[0], valid[0]                     # (out_cap,)
+        dropped = missed[0]
+    else:
+        flt, msk = residual_values(plan, seed)
+        within = (keys >= lo[0]) & (keys < hi[0])
+        within = apply_residual(keys[None, :], within[None, :], flt, msk,
+                                plan.eq_positions)[0]
+        k, dropped = keys, None
+    t = unpack3(k)
+    n = k.shape[0]
+    cols = ([jnp.broadcast_to(consts[i].astype(jnp.int32), (n,))[:, None]
+             for i in range(len(const_vars))]
+            + [t[pos].astype(jnp.int32)[:, None] for _, pos in plan.out_vars])
+    rows = (jnp.concatenate(cols, axis=-1) if cols
+            else jnp.zeros((n, 0), jnp.int32))
+    table, vmask, ndrop = compact(rows, within, out_cap, buf=scratch.table)
+    vmask = vmask | scratch.valid                      # zeros; consumes buffer
+    overflow = ((dropped if dropped is not None else ndrop).astype(jnp.int32)
+                + scratch.overflow)
+    return Bindings(const_vars + plan.out_var_names, table, vmask, overflow)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    request_id: int
+    vars: tuple[str, ...]           # result columns (execute_local's order)
+    rows: np.ndarray                # (n_valid, n_vars) int32 valid rows
+    overflow: int
+    select: tuple[str, ...] | None = None   # SPARQL projection, if any
+
+    def rows_set(self, var_order: Sequence[str] | None = None) -> set:
+        vs = tuple(var_order) if var_order is not None else self.vars
+        if not vs:
+            return set([()] if len(self.rows) else [])
+        perm = [self.vars.index(v) for v in vs]
+        return set(tuple(int(r[i]) for i in perm) for r in self.rows)
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    tid: int                        # interned template id (the bucket key)
+    template: Template
+    consts: np.ndarray
+    var_order: tuple[str, ...]
+    select: tuple[str, ...] | None
+    arrival: float | None = None    # harness-stamped, for latency accounting
+
+
+def _pow2_at_least(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class ServeEngine:
+    """Shape-bucketing batched query engine over one TripleStore.
+
+    ``submit`` (SPARQL text, ParsedQuery, or a Pattern sequence) enqueues
+    a request; ``step`` dispatches ONE batched cascade for the fullest
+    template bucket; ``drain``/``execute`` run to completion. Results are
+    per-request ``QueryResult``s whose row sets equal ``execute_local``.
+    """
+
+    def __init__(self, store: TripleStore, dictionary=None,
+                 cfg: ExecConfig = ExecConfig(), mode: str = "mapsin",
+                 max_batch: int = 32, max_queue: int = 256,
+                 compile_cache_size: int = 32, starvation_limit: int = 4):
+        if mode != "mapsin":
+            raise ValueError("ServeEngine serves the MAPSIN path only "
+                             "(reduce-side re-scans need an empty domain)")
+        self.store, self.dictionary = store, dictionary
+        self.cfg, self.mode = cfg, mode
+        self.max_batch, self.max_queue = max_batch, max_queue
+        self._compiled = LRUCache(compile_cache_size)
+        self._signatures = LRUCache(max(4 * compile_cache_size, 64))
+        # template interning: hashing a Template (a whole step tuple) per
+        # scheduling decision is measurable python overhead at qps scale;
+        # buckets key on a small int instead
+        self._template_ids: dict[Template, int] = {}
+        self._queue: deque[_Request] = deque()
+        self._next_rid = 0
+        self.starvation_limit = starvation_limit
+        self._head_skips = 0            # consecutive steps the oldest
+                                        # request's bucket was passed over
+        self.dispatches = 0             # batched cascade invocations
+        self.dispatched_queries = 0     # requests served by them
+
+    # --- admission -------------------------------------------------------
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, query, arrival: float | None = None) -> int:
+        """Enqueue one query; returns its request id. Raises EngineBusy
+        when the queue is at max_queue (admission control) and ValueError
+        for malformed SPARQL / unknown terms (fail at the front door)."""
+        select = None
+        if isinstance(query, str):
+            if self.dictionary is None:
+                raise ValueError("SPARQL text needs a Dictionary-equipped "
+                                 "engine (dictionary=...)")
+            query = parse_bgp(query, self.dictionary)
+        if isinstance(query, ParsedQuery):
+            select = query.select
+            patterns = tuple(query.patterns)
+        else:
+            patterns = tuple(query)
+        if not patterns:
+            raise ValueError("empty query")
+        if len(self._queue) >= self.max_queue:
+            raise EngineBusy(f"queue depth {len(self._queue)} at max_queue")
+        sig_key = ("sig", patterns)
+        hit = self._signatures.get(sig_key)
+        if hit is None:
+            template, consts, var_order = plan_signature(
+                self.store, patterns, self.cfg, self.mode)
+            tid = self._template_ids.setdefault(template,
+                                                len(self._template_ids))
+            hit = (tid, template, consts, var_order)
+            self._signatures[sig_key] = hit
+        tid, template, consts, var_order = hit
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, tid, template, consts, var_order,
+                                    select, arrival))
+        return rid
+
+    # --- batched execution ----------------------------------------------
+
+    def _compiled_batch(self, tid: int, template: Template, batch: int):
+        key = ("batched", tid, batch)
+        hit = self._compiled.get(key)
+        if hit is None:
+            hit = self._build(template, batch)
+            self._compiled[key] = hit
+        return hit
+
+    def _build(self, template: Template, batch: int):
+        cfg = self.cfg
+        steps, const_vars = template.steps, template.const_vars
+        first = steps[0].patterns[0]
+        first_plan = make_plan(first, const_vars)
+        scratch_vars = const_vars + first_plan.out_var_names
+
+        def one(keys_spo, keys_ops, consts, scratch):
+            keys_of = lambda pat, dom: (
+                keys_spo if make_plan(pat, dom).index == 0 else keys_ops)
+            bnd = _seed_scan(first, const_vars, keys_of(first, const_vars),
+                             consts, cfg.out_cap, cfg.impl, scratch)
+            for st in steps[1:]:
+                keys = keys_of(st.patterns[0], bnd.vars)
+                if st.kind == "multiway":
+                    bnd = ms.multiway_step(bnd, st.patterns, keys,
+                                           cfg.row_cap, cfg.out_cap, cfg.impl)
+                else:
+                    bnd = ms.mapsin_step(bnd, st.patterns[0], keys,
+                                         cfg.probe_cap, cfg.out_cap, cfg.impl)
+            return bnd
+
+        batched = jax.vmap(one, in_axes=(None, None, 0, 0))
+        donate = (3,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(batched, donate_argnums=donate), scratch_vars
+
+    def precompile(self, query, batches: Sequence[int] | None = None):
+        """Compile (and warm) the query's template cascade for the given
+        batch sizes — default every power of two up to max_batch — by
+        running it on zeroed constants. A serving deployment calls this
+        from a traffic log at startup so no live request ever waits on a
+        compile (XLA compiles lazily at first call, so merely building
+        the jitted wrapper would not warm anything)."""
+        if isinstance(query, str):
+            if self.dictionary is None:
+                raise ValueError("SPARQL text needs a Dictionary-equipped "
+                                 "engine (dictionary=...)")
+            query = parse_bgp(query, self.dictionary)
+        patterns = tuple(query.patterns if isinstance(query, ParsedQuery)
+                         else query)
+        template, _, _ = plan_signature(self.store, patterns, self.cfg,
+                                        self.mode)
+        tid = self._template_ids.setdefault(template, len(self._template_ids))
+        if batches is None:
+            batches = []
+            b = 1
+            while b <= self.max_batch:
+                batches.append(b)
+                b <<= 1
+        for b in batches:
+            jitted, scratch_vars = self._compiled_batch(tid, template, b)
+            out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
+                         jnp.zeros((b, template.n_consts), jnp.int32),
+                         self._scratch(scratch_vars, b))
+            jax.block_until_ready((out.table, out.valid, out.overflow))
+
+    def _scratch(self, scratch_vars: tuple[str, ...], batch: int) -> Bindings:
+        return Bindings(
+            scratch_vars,
+            jnp.zeros((batch, self.cfg.out_cap, len(scratch_vars)), jnp.int32),
+            jnp.zeros((batch, self.cfg.out_cap), bool),
+            jnp.zeros((batch,), jnp.int32))
+
+    def _run_bucket(self, reqs: list[_Request]) -> list[QueryResult]:
+        template = reqs[0].template
+        n = len(reqs)
+        batch = min(_pow2_at_least(n), self.max_batch)
+        jitted, scratch_vars = self._compiled_batch(reqs[0].tid, template,
+                                                    batch)
+        consts = np.zeros((batch, template.n_consts), np.int32)
+        for i, r in enumerate(reqs):
+            consts[i] = r.consts
+        for i in range(n, batch):                    # padding slots re-run
+            consts[i] = reqs[0].consts               # request 0, discarded
+        out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
+                     jnp.asarray(consts), self._scratch(scratch_vars, batch))
+        table = np.asarray(out.table)                # (batch, out_cap, nv)
+        valid = np.asarray(out.valid)
+        overflow = np.asarray(out.overflow)
+        nk = template.n_consts
+        self.dispatches += 1
+        self.dispatched_queries += n
+        results = []
+        for i, r in enumerate(reqs):
+            rows = table[i][valid[i]][:, nk:nk + len(r.var_order)]
+            results.append(QueryResult(r.rid, r.var_order, rows,
+                                       int(overflow[i]), r.select))
+        return results
+
+    # --- scheduling ------------------------------------------------------
+
+    def step(self) -> list[QueryResult]:
+        """Dispatch the fullest template bucket (at most max_batch
+        requests) as one batched cascade; [] when the queue is empty.
+
+        Anti-starvation aging: fullest-first alone would let a steady
+        majority template starve a minority request forever. After the
+        oldest queued request's bucket has been passed over
+        `starvation_limit` consecutive steps, its bucket dispatches
+        next regardless of size — latency is bounded by
+        starvation_limit dispatches, throughput stays batch-greedy."""
+        if not self._queue:
+            return []
+        buckets: dict[int, list[_Request]] = {}
+        for r in self._queue:
+            buckets.setdefault(r.tid, []).append(r)
+        head_tid = self._queue[0].tid
+        if self._head_skips >= self.starvation_limit:
+            pick = buckets[head_tid]
+        else:
+            # fullest bucket first; FIFO within a bucket (deque order)
+            pick = max(buckets.values(), key=len)
+        chosen = pick[:self.max_batch]
+        if chosen[0].tid == head_tid:
+            self._head_skips = 0
+        else:
+            self._head_skips += 1
+        taken = {r.rid for r in chosen}
+        self._queue = deque(r for r in self._queue if r.rid not in taken)
+        return self._run_bucket(chosen)
+
+    def drain(self) -> list[QueryResult]:
+        out: list[QueryResult] = []
+        while self._queue:
+            out.extend(self.step())
+        return out
+
+    def execute(self, queries) -> list[QueryResult]:
+        """Submit + drain a closed batch, results in input order."""
+        rids = [self.submit(q) for q in queries]
+        by_rid = {res.request_id: res for res in self.drain()}
+        return [by_rid[rid] for rid in rids]

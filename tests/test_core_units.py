@@ -82,3 +82,45 @@ def test_store_sharding_balanced():
     flat = np.asarray(store.keys_ops).reshape(-1)
     valid = flat[flat < np.iinfo(np.int64).max]
     assert (np.diff(valid) >= 0).all()
+
+
+# ---- LRU plan cache (bounded under many-tenant query streams) ----
+
+def test_lru_cache_evicts_cold_keeps_hot():
+    from repro.core.triple_store import LRUCache
+    c = LRUCache(maxsize=3)
+    c["a"], c["b"], c["c"] = 1, 2, 3
+    assert c["a"] == 1            # refresh "a" -> "b" is now coldest
+    c["d"] = 4
+    assert "b" not in c and set(c) == {"a", "c", "d"}
+    assert c.get("b", "gone") == "gone"
+    c["e"], c["f"] = 5, 6
+    assert len(c) == 3            # never exceeds maxsize
+
+
+def test_plan_cache_eviction_keeps_hot_entries_compiled():
+    """Churning the plan cache with cold entries must not evict the
+    compiled cascade of a query that keeps executing (the hot tenant)."""
+    from repro.core import ExecConfig, execute_local
+    from repro.core.triple_store import LRUCache
+    rng = np.random.RandomState(0)
+    tr = np.stack([rng.randint(0, 20, 200), rng.randint(100, 103, 200),
+                   rng.randint(0, 20, 200)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    store.plan_cache = LRUCache(maxsize=16)
+    cfg = ExecConfig(out_cap=1024, probe_cap=16)
+    pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
+    execute_local(store, pats, "mapsin", cfg)
+    ck = [k for k in store.plan_cache if k[0] == "cascade"]
+    assert len(ck) == 1
+    jitted_before = store.plan_cache[ck[0]]
+    # churn: way more cold inserts than maxsize, touching the hot query
+    # every few inserts (as a live tenant would)
+    for i in range(100):
+        store.plan_cache[("cold", i)] = i
+        if i % 4 == 0:
+            execute_local(store, pats, "mapsin", cfg)
+    assert ck[0] in store.plan_cache
+    assert store.plan_cache[ck[0]] is jitted_before  # never recompiled
+    assert ("cold", 0) not in store.plan_cache       # cold entries evicted
+    assert len(store.plan_cache) <= 16

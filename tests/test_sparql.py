@@ -1,0 +1,89 @@
+"""SPARQL BGP front-end: exact round-trip against the hand-built query
+sets (text -> parse -> Pattern equality) + clean rejection of malformed
+input (unknown prefix, undeclared term, non-BGP syntax)."""
+import pytest
+
+from repro.core.rdf import Dictionary
+from repro.data.rdf_gen import (LUBM_SPARQL, SP2B_SPARQL, lubm_like,
+                                sp2b_like)
+from repro.serve import parse_bgp
+
+_LUBM = lubm_like(1)
+_SP2B = sp2b_like(200)
+
+
+@pytest.mark.parametrize("qname", sorted(LUBM_SPARQL))
+def test_lubm_text_roundtrips_to_patterns(qname):
+    _, d, queries = _LUBM
+    pq = parse_bgp(LUBM_SPARQL[qname], d)
+    assert list(pq.patterns) == queries[qname]
+
+
+@pytest.mark.parametrize("qname", sorted(SP2B_SPARQL))
+def test_sp2b_text_roundtrips_to_patterns(qname):
+    _, d, queries = _SP2B
+    pq = parse_bgp(SP2B_SPARQL[qname], d)
+    assert list(pq.patterns) == queries[qname]
+
+
+def test_select_projection_and_star():
+    _, d, _ = _LUBM
+    pq = parse_bgp("SELECT ?y WHERE { ?x <takesCourse> ?y . }", d)
+    assert pq.select == ("?y",) and pq.variables == ("?x", "?y")
+    pq = parse_bgp("SELECT * WHERE { ?x <takesCourse> ?y . }", d)
+    assert pq.select == ("?x", "?y")
+
+
+def test_a_shorthand_is_rdf_type():
+    _, d, queries = _LUBM
+    pq = parse_bgp("SELECT ?x WHERE { ?x a <Student> . }", d)
+    assert pq.patterns[0].p == d.lookup("rdf:type")
+
+
+def test_literal_terms_resolve():
+    _, d, _ = _SP2B
+    pq = parse_bgp('SELECT ?a WHERE { ?a <dc:title> "title0" . }', d)
+    assert pq.patterns[0].o == d.lookup("title0")
+
+
+@pytest.mark.parametrize("text,needle", [
+    # unknown prefix
+    ("SELECT ?x WHERE { ?x ub:worksFor <Dept0.U0> . }", "unknown prefix"),
+    # undeclared terms: IRI / literal / prefixed-name expansions
+    ("SELECT ?x WHERE { ?x a <NoSuchClass> . }", "undeclared term"),
+    ('SELECT ?x WHERE { ?x <name> "no-such-name" . }', "undeclared term"),
+    ("PREFIX ub: <ub:>\nSELECT ?x WHERE { ?x ub:worksFor ?y . }",
+     "undeclared term"),
+    # non-BGP constructs, named in the error
+    ("SELECT ?x WHERE { ?x a <Student> . FILTER(?x > 3) }", "FILTER"),
+    ("SELECT ?x WHERE { OPTIONAL { ?x a <Student> . } }", "OPTIONAL"),
+    ("SELECT ?x WHERE { ?x a <Student> . } LIMIT 5", "LIMIT"),
+    ("ASK WHERE { ?x a <Student> . }", "ASK"),
+    # malformed structure
+    ("SELECT WHERE { ?x a <Student> . }", "SELECT"),
+    ("SELECT ?x { ?x a <Student> . }", "WHERE"),
+    ("SELECT ?x WHERE { ?x a <Student> .", "unterminated"),
+    ("SELECT ?x WHERE { }", "empty basic graph pattern"),
+    ("SELECT ?x WHERE { ?x a . }", "object"),
+    ("SELECT ?z WHERE { ?x a <Student> . }", "does not occur"),
+    ("SELECT ?x WHERE { ?x a <Student> ; <memberOf> ?y . }", ";"),
+    ("PREFIX rdf <rdf:>\nSELECT ?x WHERE { ?x rdf:type <Student> . }",
+     "PREFIX"),
+])
+def test_malformed_queries_raise_value_error(text, needle):
+    _, d, _ = _LUBM
+    with pytest.raises(ValueError, match="SPARQL"):
+        try:
+            parse_bgp(text, d)
+        except ValueError as e:
+            assert needle.lower() in str(e).lower(), (str(e), needle)
+            raise
+
+
+def test_parser_never_mints_dictionary_ids():
+    _, d, _ = _LUBM
+    n = len(d)
+    with pytest.raises(ValueError):
+        parse_bgp("SELECT ?x WHERE { ?x a <Imaginary> . }", d)
+    parse_bgp("SELECT ?x WHERE { ?x a <Student> . }", d)
+    assert len(d) == n

@@ -198,3 +198,76 @@ def test_dist_probe_rejects_unknown_routing():
         dist_probe(z, z, jnp.zeros((4, 3), jnp.int64), (False,) * 3, (),
                    jnp.zeros((8,), jnp.int64), 4, "data", routing="a2a",
                    splits=None)
+
+
+# ---------------------------------------------------------------------------
+# measured a2a_bucket_cap auto-tune (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+def test_tune_a2a_bucket_cap_uses_measured_max_region_load():
+    from repro.core.bgp import tune_a2a_bucket_cap
+    rng = np.random.RandomState(0)
+    tr = np.stack([rng.randint(0, 40, 400), rng.randint(100, 104, 400),
+                   rng.randint(0, 40, 400)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
+    cfg = ExecConfig(out_cap=4096, probe_cap=64)
+    cap = tune_a2a_bucket_cap(store, pats, cfg, num_shards=4)
+    stats: list = []
+    execute_local(store, pats, "mapsin", ExecConfig(out_cap=4096,
+                  probe_cap=64, route_shards=4), stats=stats)
+    want = max(st["deliveries_max_region"] for st in stats
+               if st["kind"] != "scan")
+    assert cap == max(want, 8)
+    assert cap <= cfg.out_cap
+    # selective query: measured cap beats the static 2x-uniform share
+    assert cap < auto_bucket_cap(cfg.out_cap, 4)
+    # cached: second call hits the plan cache (same object semantics)
+    assert tune_a2a_bucket_cap(store, pats, cfg, num_shards=4) == cap
+    assert ("a2a_tune", tuple(pats), cfg, 4) in store.plan_cache
+
+
+def test_tune_a2a_bucket_cap_fallback_is_out_cap():
+    from repro.core.bgp import tune_a2a_bucket_cap
+    rng = np.random.RandomState(1)
+    tr = np.stack([rng.randint(0, 20, 100), rng.randint(100, 103, 100),
+                   rng.randint(0, 20, 100)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    cfg = ExecConfig(out_cap=512)
+    # single-pattern scan: no join step ever probes -> drop-free fallback
+    assert tune_a2a_bucket_cap(store, [Pattern("?x", 101, "?y")], cfg,
+                               num_shards=4) == cfg.out_cap
+
+
+def test_sharded_a2a_auto_tunes_and_stays_exact():
+    """execute_sharded with a2a_bucket_cap=0 must tune from measurement
+    (plan-cache entry appears) and still match the oracle exactly."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    rng = np.random.RandomState(2)
+    tr = np.stack([rng.randint(0, 30, 300), rng.randint(100, 104, 300),
+                   rng.randint(0, 30, 300)], 1).astype(np.int32)
+    store = build_store(tr, num_shards=1)
+    pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
+    cfg = ExecConfig(out_cap=4096, probe_cap=128, routing="a2a")
+    t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin", cfg)
+    assert any(k[0] == "a2a_tune" for k in store.plan_cache)
+    got = rows_set(t, v, len(vars_))
+    want, ovars = execute_oracle(tr, pats)
+    perm = [vars_.index(x) for x in ovars]
+    assert {tuple(r[i] for i in perm) for r in got} == want
+    assert int(np.asarray(ovf).sum()) == 0
+
+
+def test_tune_a2a_bucket_cap_overflow_falls_back_to_out_cap():
+    """A truncated tuning run measures a truncated probe set; the sharded
+    run keeps out_cap rows PER SHARD, so the tuner must not trust it."""
+    from repro.core.bgp import tune_a2a_bucket_cap
+    rng = np.random.RandomState(3)
+    tr = np.stack([rng.randint(0, 30, 600), rng.randint(100, 102, 600),
+                   rng.randint(0, 30, 600)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 100, "?y"), Pattern("?y", 101, "?z")]
+    tiny = ExecConfig(out_cap=16, probe_cap=2)   # guaranteed truncation
+    assert tune_a2a_bucket_cap(store, pats, tiny, num_shards=4) == 16
