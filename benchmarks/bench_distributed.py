@@ -82,7 +82,7 @@ def _mesh_main(emit=print, lubm_queries=LUBM_QUERIES,
             cap = cfg.row_cap if st.kind == "multiway" else cfg.probe_cap
             if routing == "a2a":
                 bc = cfg.a2a_bucket_cap or auto_bucket_cap(b, s)
-                rec = (s - 1) * bc * (8 + 8 + 24)       # lo/hi/flt buckets out
+                rec = (s - 1) * bc * (8 + 8)            # lo/hi buckets out
                 back = (s - 1) * bc * (cap * 8 + 4 + 4)  # matches/cnt/missed
                 total += rec + back
             else:

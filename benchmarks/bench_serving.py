@@ -19,6 +19,17 @@ clock driven by measured wall times:
               cascade PER DISTINCT QUERY (constants are baked into the
               plan), the engine one per (template, batch-shape).
 
+A fourth phase measures the PRODUCTION shape (PR 4): `sharded` runs the
+same kind of mixed stream through a ServeEngine bound to a forced
+8-device mesh over a region-sharded store with `routing="a2a"` — one
+`shard_map` dispatch (one all_to_all pair per cascade step) serves the
+whole batch — against the per-query `execute_sharded` loop, recording
+qps, avg batch, and the static a2a collective payload per query vs the
+single-query tuned routed path (the acceptance gates: >= 3x qps at avg
+batch >= 8, payload per query within 1.5x). Runs in a subprocess with
+`--xla_force_host_platform_device_count` so the caller's device view is
+untouched (same pattern as bench_distributed).
+
 Every batched result is verified bit-identical (row set) to
 `execute_local` on the same (patterns, cfg); each distinct template
 shape is additionally verified against `execute_oracle` on a small
@@ -29,6 +40,10 @@ request traffic.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -157,8 +172,140 @@ def _run_batched(engines, reqs, arrivals, max_queue_shed=False):
     return lat, now, shed
 
 
+# ---------------------------------------------------------------------------
+# Sharded batched serving (forced-multi-device; the production shape)
+# ---------------------------------------------------------------------------
+
+SHARDED_SHARDS = 8
+SHARDED_SHAPES = ("lubm_q1", "lubm_q3", "lubm_q5", "lubm_q13", "lubm_q4star")
+
+
+def _seq_payload_bytes(store, pats, cfg, num_shards):
+    """Static per-shard a2a collective payload of ONE execute_sharded call
+    (tuned bucket; same convention as ServeEngine._payload_bytes and
+    bench_distributed: the local diagonal block is excluded)."""
+    from repro.core.bgp import plan_steps, tune_a2a_bucket_cap
+    tuned = tune_a2a_bucket_cap(store, pats, cfg, num_shards)
+    s, total = num_shards, 0
+    for st in plan_steps(pats, cfg, store)[1:]:
+        cap = cfg.row_cap if st.kind == "multiway" else cfg.probe_cap
+        total += (s - 1) * tuned * (8 + 8)
+        total += (s - 1) * tuned * (cap * 8 + 4 + 4)
+    return total
+
+
+def _sharded_mesh_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
+                       n_requests=160, max_batch=16, n_variants=3,
+                       shape_names=SHARDED_SHAPES, seed=0):
+    """Body that runs INSIDE the forced-multi-device process: batched
+    sharded engine vs the per-query execute_sharded loop, warm on both
+    sides, every batched result verified row-identical to execute_local."""
+    import dataclasses
+
+    from jax.sharding import Mesh
+
+    assert jax.device_count() >= num_shards, jax.devices()
+    mesh = Mesh(np.array(jax.devices()[:num_shards]), ("data",))
+    cfg = dataclasses.replace(CFG, routing="a2a", a2a_bucket_cap=0)
+    tr, d, _ = lubm_like(lubm_scale)
+    store = build_store(tr, num_shards=num_shards)
+    rng = np.random.RandomState(seed)
+    shapes = [s for s in _lubm_shapes(d, lubm_scale, rng)
+              if s[0] in shape_names]
+    # fixed per-template variant pools: the sequential loop compiles (and
+    # tunes) per DISTINCT query, so unbounded constants would time compiles
+    pools = {name: [fn() for _ in range(n_variants)] for name, _, fn in shapes}
+    names = [name for name, _, _ in shapes]
+    reqs = [pools[names[rng.randint(len(names))]][rng.randint(n_variants)]
+            for _ in range(n_requests)]
+
+    engine = ServeEngine(store, d, cfg, mesh=mesh, max_batch=max_batch,
+                         max_queue=4 * n_requests, compile_cache_size=64)
+
+    def run_seq():
+        for pats in reqs:
+            from repro.core import execute_sharded
+            t, v, ovf, _ = execute_sharded(store, pats, mesh, "mapsin", cfg)
+            jax.block_until_ready((t, v, ovf))
+
+    # --- warm-up + verification (compiles and tuning paid here) ----------
+    results = engine.execute(reqs)
+    run_seq()
+    verified, ovf_total, local_cache = 0, 0, {}
+    for pats, res in zip(reqs, results):
+        key = tuple(pats)
+        if key not in local_cache:
+            bnd = execute_local(store, pats, "mapsin", cfg)
+            local_cache[key] = (rows_set(bnd.table, bnd.valid, len(bnd.vars)),
+                                tuple(bnd.vars))
+        want, vars_ = local_cache[key]
+        assert res.rows_set(vars_) == want, pats
+        verified += 1
+        ovf_total += res.overflow
+
+    # --- timed: batched-sharded vs per-query execute_sharded loop --------
+    d0, q0 = engine.dispatches, engine.dispatched_queries
+    p0 = engine.a2a_payload_bytes
+    t0 = time.perf_counter()
+    engine.execute(reqs)
+    sat_b = time.perf_counter() - t0
+    dispatches = engine.dispatches - d0
+    avg_batch = (engine.dispatched_queries - q0) / max(dispatches, 1)
+    bytes_q_batched = (engine.a2a_payload_bytes - p0) / n_requests
+    t0 = time.perf_counter()
+    run_seq()
+    sat_s = time.perf_counter() - t0
+    qps_b, qps_s = n_requests / sat_b, n_requests / sat_s
+    bytes_q_seq = float(np.mean([_seq_payload_bytes(store, pats, cfg,
+                                                    num_shards)
+                                 for pats in reqs]))
+
+    emit(f"bench_serving/sharded{num_shards}_lubm{lubm_scale},"
+         f"{sat_b / n_requests * 1e6:.0f},"
+         f"qps_batched={qps_b:.1f};qps_seq={qps_s:.1f};"
+         f"speedup={qps_b / qps_s:.2f};avg_batch={avg_batch:.1f};"
+         f"dispatches={dispatches};"
+         f"probe_payload_q_batched={bytes_q_batched:.0f};"
+         f"probe_payload_q_seq={bytes_q_seq:.0f};"
+         f"bytes_ratio={bytes_q_batched / max(bytes_q_seq, 1e-9):.2f};"
+         f"verified_local={verified};distinct={len(local_cache)};"
+         f"ovf={ovf_total};n={n_requests}")
+
+
+def sharded_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
+                 n_requests=160, max_batch=16, n_variants=3,
+                 shape_names=SHARDED_SHAPES, seed=0):
+    """Run the sharded serving suite, respawning in a subprocess with
+    forced host devices when the current process doesn't have enough
+    (the device-count flag must never leak into the caller's jax)."""
+    if jax.device_count() >= num_shards:
+        return _sharded_mesh_main(emit, num_shards, lubm_scale, n_requests,
+                                  max_batch, n_variants, shape_names, seed)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count"
+                        f"={num_shards}").strip()
+    env["JAX_PLATFORMS"] = "cpu"   # the flag only forces the HOST platform
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    spec = json.dumps({"num_shards": num_shards, "lubm_scale": lubm_scale,
+                       "n_requests": n_requests, "max_batch": max_batch,
+                       "n_variants": n_variants,
+                       "shape_names": list(shape_names), "seed": seed})
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving", spec],
+        env=env, capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    if out.returncode != 0:
+        raise RuntimeError(f"bench_serving sharded subprocess failed:\n"
+                           f"{out.stderr[-4000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith("bench_serving/"):
+            emit(line)
+
+
 def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
-         max_batch=16, seed=0, oracle=True):
+         max_batch=16, seed=0, oracle=True, sharded=True):
     rng = np.random.RandomState(seed)
     lt, ld, _ = lubm_like(lubm_scale)
     st, sd, _ = sp2b_like(sp2b_scale)
@@ -278,10 +425,25 @@ def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
          f"cold_s_batched={cold_batched:.2f};cold_s_seq={cold_seq:.2f};"
          f"cold_speedup={cold_seq / cold_batched:.2f};"
          f"distinct_queries={len(local_cache)}")
+
+    # --- sharded batched serving (forced 8-device subprocess) -------------
+    if sharded:
+        sharded_main(emit, seed=seed)
     return qps_b / qps_s
 
 
 if __name__ == "__main__":
-    from benchmarks.run import run_suite
-    import benchmarks.bench_serving as mod
-    run_suite("serving", mod)
+    args = sys.argv[1:]
+    if args and args[0].startswith("{"):
+        spec = json.loads(args[0])
+        if jax.device_count() < spec["num_shards"]:   # spec arg == we ARE
+            raise SystemExit(                         # the child; no respawn
+                f"forced host devices ineffective: {jax.devices()}")
+        _sharded_mesh_main(print, spec["num_shards"], spec["lubm_scale"],
+                           spec["n_requests"], spec["max_batch"],
+                           spec["n_variants"], tuple(spec["shape_names"]),
+                           spec["seed"])
+    else:
+        from benchmarks.run import run_suite
+        import benchmarks.bench_serving as mod
+        run_suite("serving", mod)

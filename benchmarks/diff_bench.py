@@ -1,0 +1,99 @@
+"""Old-vs-new BENCH_*.json derived-metric diff (markdown, for CI).
+
+``python -m benchmarks.diff_bench [GIT_REF]`` compares the committed
+benchmark trajectory files against the same files at GIT_REF (default
+``HEAD^``) and prints a markdown table of the changed derived metrics —
+CI appends it to the GitHub Actions job summary so a perf regression is
+visible on the push that caused it, without downloading artifacts.
+
+Only rows whose value moved by >= CHANGE_THRESHOLD (or appeared /
+disappeared) are printed; headline metrics (speedup/qps/ratio families)
+are always listed for new rows. Exits 0 even when the ref has no BENCH
+files (first push, shallow clone) — the diff is advisory, never a gate.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import subprocess
+import sys
+
+CHANGE_THRESHOLD = 0.05          # 5% relative move is worth a line
+HEADLINE = ("speedup", "qps_batched", "qps_seq", "time_ratio",
+            "cold_speedup", "bytes_ratio", "avg_batch", "p99_ms_batched")
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def _load_ref(ref: str, relpath: str):
+    out = subprocess.run(["git", "show", f"{ref}:{relpath}"],
+                         capture_output=True, text=True, cwd=REPO)
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def _metrics(row: dict) -> dict:
+    out = {"us": row.get("us")}
+    for k, v in row.get("derived", {}).items():
+        if isinstance(v, (int, float)):
+            out[k] = v
+    return out
+
+
+def diff_lines(ref: str = "HEAD^"):
+    lines = [f"### Benchmark trajectory vs `{ref}`", "",
+             "| row | metric | old | new | change |",
+             "|---|---|---:|---:|---:|"]
+    n_changes = 0
+    for path in sorted(glob.glob(os.path.join(REPO, "benchmarks",
+                                              "BENCH_*.json"))):
+        rel = os.path.relpath(path, REPO)
+        with open(path) as f:
+            new = json.load(f)
+        old = _load_ref(ref, rel)
+        old_rows = (old or {}).get("rows", {})
+        for name, row in sorted(new.get("rows", {}).items()):
+            new_m = _metrics(row)
+            old_m = _metrics(old_rows[name]) if name in old_rows else None
+            for metric, nv in sorted(new_m.items()):
+                if nv is None:
+                    continue
+                if old_m is None:
+                    if metric in HEADLINE:
+                        lines.append(f"| {name} | {metric} | — | {nv:g} "
+                                     f"| new |")
+                        n_changes += 1
+                    continue
+                ov = old_m.get(metric)
+                if ov is None or ov == nv:
+                    continue
+                delta = (nv - ov) / abs(ov) if ov else float("inf")
+                if abs(delta) < CHANGE_THRESHOLD and metric not in HEADLINE:
+                    continue
+                lines.append(f"| {name} | {metric} | {ov:g} | {nv:g} "
+                             f"| {delta:+.1%} |")
+                n_changes += 1
+    if n_changes == 0:
+        return [f"Benchmark trajectory vs `{ref}`: no metric moved by "
+                f">= {CHANGE_THRESHOLD:.0%}."]
+    return lines
+
+
+def main() -> int:
+    ref = sys.argv[1] if len(sys.argv) > 1 else "HEAD^"
+    probe = subprocess.run(["git", "rev-parse", "--verify", ref],
+                           capture_output=True, text=True, cwd=REPO)
+    if probe.returncode != 0:
+        print(f"Benchmark trajectory: ref `{ref}` not available "
+              f"(first commit or shallow clone) — nothing to diff.")
+        return 0
+    print("\n".join(diff_lines(ref)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

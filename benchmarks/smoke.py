@@ -9,7 +9,11 @@ written at smoke scale (they would clobber the real perf trajectory).
 
 Exception: bench_distributed is NOT smoked here — it spawns an 8-device
 subprocess and pays minutes of shard_map compiles even at minimal scale;
-its engine path is covered by tests/test_multidevice.py instead.
+its engine path is covered by tests/test_multidevice.py instead. The
+sharded SERVING path IS smoked (serving_sharded): a forced 2-device
+subprocess at tiny scale compiles only a handful of small template
+cascades, cheap enough to keep the one crash canary covering the full
+production shape (shard_map + routing="a2a" + batched engine).
 """
 from __future__ import annotations
 
@@ -38,7 +42,10 @@ def main() -> int:
             emit=emit, sizes=((1 << 12, 1 << 8),))),
         ("serving", lambda emit: bench_serving.main(
             emit=emit, lubm_scale=1, sp2b_scale=300, n_requests=12,
-            max_batch=8, oracle=False)),
+            max_batch=8, oracle=False, sharded=False)),
+        ("serving_sharded", lambda emit: bench_serving.sharded_main(
+            emit=emit, num_shards=2, lubm_scale=1, n_requests=6,
+            max_batch=4, n_variants=2, shape_names=("lubm_q1", "lubm_q5"))),
     ]
     failures = []
     for name, fn in suites:

@@ -173,6 +173,10 @@ def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
       mapsin_routed  — the production point-to-point GET (DESIGN.md §2):
                        each probe travels to its owner shard once (a2a) and
                        its matches travel back once. O(B) — the paper's RPC.
+                       The record is two keys + origin bookkeeping; the
+                       residual filters never cross the network (applied by
+                       the origin shard after the round trip — see
+                       _dist_probe_a2a).
       reduce         — shuffle BOTH relations (repartition join).
     """
     s, b = num_shards, cfg.out_cap
@@ -185,7 +189,7 @@ def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
         matches = s * (s * b) * cap * 8                # psum_scatter ring pass
         return keys + counts + matches
     if mode == "mapsin_routed":
-        keys = s * b * (8 + 8 + 24 + 4)                # a2a probe records
+        keys = s * b * (8 + 8 + 4)                     # a2a probe records
         matches = s * b * cap * 8                      # a2a matches home
         return keys + matches
     # reduce-side: shuffle Omega and the scanned relation in full
@@ -291,12 +295,13 @@ def _route_splits(store: TripleStore, index: int, s: int) -> np.ndarray:
 
 
 def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
-                  whole_row: bool = False) -> tuple[int, int]:
+                  whole_row: bool = False) -> tuple[int, int, int]:
     """Measured routing fan-out if each probe were routed only to shards
     whose key range it intersects — the paper's region-server GET, vs the
-    broadcast's n_in * S. Returns (total deliveries, max per-region load);
-    the max is what sizes the a2a per-destination probe buckets
-    (tune_a2a_bucket_cap)."""
+    broadcast's n_in * S. Returns (total deliveries, max per-region load,
+    max range-entry count per probe); the per-region max sizes the a2a
+    per-destination probe buckets and the per-probe max sizes the answer
+    return leg (tune_a2a_bucket_cap)."""
     from repro.core.plan import probe_ranges, row_range
     lo, hi = (row_range if whole_row else probe_ranges)(plan, bnd.table)
     lo, hi = np.asarray(lo), np.asarray(hi)
@@ -306,7 +311,11 @@ def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
     hits = range_intersects_region(lo[:, None], hi[:, None],
                                    splits[None, :-1], splits[None, 1:])
     per_region = hits[valid].sum(axis=0)
-    return int(per_region.sum()), int(per_region.max(initial=0))
+    keys = _host_keys(store, plan.index)
+    lens = (np.searchsorted(keys, hi[valid])
+            - np.searchsorted(keys, lo[valid]))
+    return (int(per_region.sum()), int(per_region.max(initial=0)),
+            int(lens.max(initial=0)))
 
 
 def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
@@ -321,18 +330,18 @@ def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
                   "n_patterns": 1})
     for st in steps[1:]:
         n_in, nv_in = int(bnd.count()), len(bnd.vars)
-        deliveries = max_region = 0
+        deliveries = max_region = probe_len = 0
         if mode == "mapsin":
             keys = keys_of(st.patterns[0], bnd.vars)
             plan0 = make_plan(st.patterns[0], bnd.vars)
             if st.kind == "multiway":
-                deliveries, max_region = _probe_fanout(store, plan0, bnd,
-                                                       s_route, whole_row=True)
+                deliveries, max_region, probe_len = _probe_fanout(
+                    store, plan0, bnd, s_route, whole_row=True)
                 bnd = ms.multiway_step(bnd, st.patterns, keys, cfg.row_cap,
                                        cfg.out_cap, cfg.impl)
             else:
-                deliveries, max_region = _probe_fanout(store, plan0, bnd,
-                                                       s_route)
+                deliveries, max_region, probe_len = _probe_fanout(
+                    store, plan0, bnd, s_route)
                 bnd = ms.mapsin_step(bnd, st.patterns[0], keys, cfg.probe_cap,
                                      cfg.out_cap, cfg.impl)
         else:
@@ -349,8 +358,12 @@ def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
                       "n_out": int(bnd.count()), "nv": nv_in,
                       "relation": rel, "n_patterns": len(st.patterns),
                       "deliveries": deliveries, "route_shards": s_route,
-                      "deliveries_max_region": max_region})
+                      "deliveries_max_region": max_region,
+                      "probe_len_max": probe_len})
     return bnd
+
+
+_MISSING = object()   # plan-cache sentinel (a cached value may be None)
 
 
 def tune_a2a_bucket_cap(store: TripleStore, patterns: Sequence[Pattern],
@@ -373,8 +386,13 @@ def tune_a2a_bucket_cap(store: TripleStore, patterns: Sequence[Pattern],
     truncated single-store measurement would under-size the buckets and
     drop probes the static default delivered."""
     ck = ("a2a_tune", tuple(patterns), cfg, num_shards)
+    sk = ("a2a_tune_steps",) + ck[1:]
     hit = store.plan_cache.get(ck)
-    if hit is not None:
+    # early-return only when the companion step-caps entry is also still
+    # resident (both are re-read so the LRU refreshes them together): the
+    # two keys can otherwise diverge under eviction pressure, leaving
+    # tuned_step_answer_caps permanently None for a still-cached cap
+    if hit is not None and store.plan_cache.get(sk, _MISSING) is not _MISSING:
         return hit
     stats: list = []
     tune_cfg = dataclasses.replace(cfg, route_shards=num_shards,
@@ -382,12 +400,41 @@ def tune_a2a_bucket_cap(store: TripleStore, patterns: Sequence[Pattern],
     bnd = execute_local(store, patterns, "mapsin", tune_cfg, stats=stats)
     loads = [st["deliveries_max_region"] for st in stats
              if st["kind"] != "scan" and "deliveries_max_region" in st]
-    if not loads or int(np.asarray(bnd.overflow)) > 0:
+    overflowed = int(np.asarray(bnd.overflow)) > 0
+    if not loads or overflowed:
         cap = cfg.out_cap
     else:
         cap = min(max(max(loads), 8), cfg.out_cap)
+    # per-join-step answer caps ride along from the same measured run: the
+    # max range-entry count any probe of that step actually covers bounds
+    # the a2a return leg (min'd with the configured cap — never looser).
+    # None on overflow: a truncated tuning run under-measures (same
+    # reasoning as the bucket fallback above).
+    if overflowed:
+        step_caps = None
+    else:
+        step_caps = tuple(
+            min(max(st.get("probe_len_max", 0), 1),
+                cfg.row_cap if st["kind"] == "multiway" else cfg.probe_cap)
+            for st in stats if st["kind"] != "scan")
+    store.plan_cache[sk] = step_caps
     store.plan_cache[ck] = cap
     return cap
+
+
+def tuned_step_answer_caps(store: TripleStore, patterns: Sequence[Pattern],
+                           cfg: ExecConfig, num_shards: int):
+    """Per-join-step measured answer caps for routing="a2a" (the a2a
+    return leg ships `cap` key slots per routed probe — right-sizing it
+    from the measured max range length is what keeps batched serving's
+    match traffic proportional to actual matches). Computed by the same
+    cached tuning run as tune_a2a_bucket_cap; None when nothing reliable
+    was measured (overflowed tuning run) — callers fall back to the
+    configured caps."""
+    ck = ("a2a_tune_steps", tuple(patterns), cfg, num_shards)
+    if ck not in store.plan_cache:
+        tune_a2a_bucket_cap(store, patterns, cfg, num_shards)
+    return store.plan_cache.get(ck)
 
 
 def query_traffic_actual(stats: list, mode: str, num_shards: int,
@@ -397,13 +444,15 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
 
     network — what crosses the interconnect per join step:
       mapsin_routed — split-aware routing: each input mapping's probe
-                      record (44 B: lo/hi keys + filters + origin) travels
+                      record (20 B: lo/hi keys + origin; the residual
+                      filters stay on the origin shard since PR 4) travels
                       once per REGION its key range intersects — the
                       MEASURED fan-out recorded by the instrumented
                       executor ("deliveries"; ~1 for point probes, >1 only
                       for fat rows spanning region boundaries) — and each
                       match comes back once (12 B triple);
-      mapsin        — broadcast-GET: probe records x (S-1), matches once;
+      mapsin        — broadcast-GET: 44 B probe records (lo/hi + filters +
+                      origin) x (S-1), matches once;
       reduce        — Omega + the (already filtered) relation are shuffled.
 
     scanned — storage bytes read to produce the step's input:
@@ -427,18 +476,18 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
             else:
                 scanned += st["n_out"] * 8 + logn * 8  # index range scan
             continue
-        rec, match_b = 44, 12
+        rec_routed, rec_bcast, match_b = 20, 44, 12
         deliv = (st["deliveries"] if st.get("route_shards") == s
                  and "deliveries" in st else st["n_in"])
-        routed += deliv * rec * rounds
-        broadcast += st["n_in"] * rec * (s - 1) * rounds
+        routed += deliv * rec_routed * rounds
+        broadcast += st["n_in"] * rec_bcast * (s - 1) * rounds
         if mode == "mapsin_routed":
             if s > 1:
-                net += deliv * rec * rounds + st["n_out"] * match_b
+                net += deliv * rec_routed * rounds + st["n_out"] * match_b
             scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
         elif mode == "mapsin":
             if s > 1:
-                net += (st["n_in"] * rec * (s - 1) * rounds
+                net += (st["n_in"] * rec_bcast * (s - 1) * rounds
                         + st["n_out"] * match_b)
             scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
         else:  # reduce-side
@@ -449,6 +498,35 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
             scanned += st["n_patterns"] * n_triples * 8
     return {"network": net, "scanned": scanned, "total": net + scanned,
             "probe_bytes_routed": routed, "probe_bytes_broadcast": broadcast}
+
+
+def apply_dist_step(bnd: ms.Bindings, st: Step, keys, splits,
+                    cfg: ExecConfig, axis: str,
+                    batched: bool = False) -> ms.Bindings:
+    """One distributed MAPSIN cascade step (join or multiway star) — the
+    shared dispatch behind execute_sharded's per-shard body and the serving
+    engine's batched template cascade (`batched=True` expects Bindings with
+    a leading query axis and routes the whole batch through ONE collective
+    round per step; see core/distributed.py)."""
+    if st.kind == "multiway":
+        fn = (dist.batched_dist_multiway_step if batched
+              else dist.dist_multiway_step)
+        return fn(bnd, st.patterns, keys, cfg.row_cap, cfg.out_cap, axis,
+                  cfg.impl, shard_splits=splits, routing=cfg.routing,
+                  bucket_cap=cfg.a2a_bucket_cap)
+    fn = dist.batched_dist_mapsin_step if batched else dist.dist_mapsin_step
+    return fn(bnd, st.patterns[0], keys, cfg.probe_cap, cfg.out_cap, axis,
+              cfg.impl, shard_splits=splits, routing=cfg.routing,
+              bucket_cap=cfg.a2a_bucket_cap)
+
+
+def mesh_fingerprint(mesh, axis: str) -> tuple:
+    """Hashable mesh identity for compile-cache keys: axis name + device
+    ids in mesh order. Two meshes with the same fingerprint place the same
+    shard on the same device, so a cascade compiled for one is valid for
+    the other."""
+    return (axis, tuple(mesh.axis_names),
+            tuple(int(d.id) for d in np.ravel(mesh.devices)))
 
 
 def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
@@ -466,20 +544,10 @@ def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
                               cfg.impl)
         for st in steps[1:]:
             if mode == "mapsin":
-                if st.kind == "multiway":
-                    keys = keys_of(st.patterns[0], bnd.vars)
-                    bnd = dist.dist_multiway_step(
-                        bnd, st.patterns, keys, cfg.row_cap, cfg.out_cap,
-                        axis, cfg.impl,
-                        shard_splits=splits_of(st.patterns[0], bnd.vars),
-                        routing=cfg.routing, bucket_cap=cfg.a2a_bucket_cap)
-                else:
-                    keys = keys_of(st.patterns[0], bnd.vars)
-                    bnd = dist.dist_mapsin_step(
-                        bnd, st.patterns[0], keys, cfg.probe_cap, cfg.out_cap,
-                        axis, cfg.impl,
-                        shard_splits=splits_of(st.patterns[0], bnd.vars),
-                        routing=cfg.routing, bucket_cap=cfg.a2a_bucket_cap)
+                keys = keys_of(st.patterns[0], bnd.vars)
+                bnd = apply_dist_step(
+                    bnd, st, keys, splits_of(st.patterns[0], bnd.vars),
+                    cfg, axis)
             else:
                 for pat in st.patterns:
                     keys = keys_of(pat, ())  # relation scan: empty domain

@@ -7,12 +7,14 @@ Traffic model (the faithful translation of the paper's network argument):
                   range intersects its region. Pays O(S) on the key leg;
                   kept as the validated reference path.
       routing="a2a"       — point-to-point dispatch (DESIGN.md §2): each
-                  probe record (lo/hi/filters) is bucketed by the region(s)
-                  its range intersects (the stored splits) and shipped with
-                  all_to_all only to those shards; matches ride a second
-                  all_to_all home, keyed on the sender's bucket slots. This
-                  is the paper's HBase region-server GET: O(B) probe bytes,
-                  independent of the cluster size.
+                  probe record (lo/hi — the residual filters stay on the
+                  origin shard, which applies them after the round trip)
+                  is bucketed by the region(s) its range intersects (the
+                  stored splits) and shipped with all_to_all only to those
+                  shards; raw range entries ride a second all_to_all home,
+                  keyed on the sender's bucket slots. This is the paper's
+                  HBase region-server GET: O(B) probe bytes, independent
+                  of the cluster size.
   reduce-side   — all_to_all(BOTH full relations)  (see reduce_side.py)
 
 The store is range-sharded; a probe whose key range spans several shards
@@ -92,18 +94,6 @@ def _a2a(x, axis: str):
                               tiled=True)
 
 
-def _pack_matches(k, valid, cap: int):
-    """Compact each row's matches to the front (key order preserved):
-    returns ((n, cap) int64 of key+1 with 0 == empty, (n,) int32 counts)."""
-    n = k.shape[0]
-    pos = jnp.cumsum(valid, axis=-1) - 1
-    slot = jnp.where(valid, pos, cap)
-    buf = jnp.zeros((n, cap + 1), jnp.int64)
-    buf = buf.at[jnp.arange(n)[:, None], slot].set(
-        jnp.where(valid, k + 1, 0))
-    return buf[:, :cap], jnp.sum(valid, axis=-1).astype(jnp.int32)
-
-
 def auto_bucket_cap(batch: int, num_shards: int) -> int:
     """Default per-destination probe bucket capacity: 2x the uniform share
     (skew headroom), floored at 32, never beyond `batch` (a shard never
@@ -120,17 +110,34 @@ def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
     Four phases, two all_to_all rounds, zero all_gathers:
       1. route   — (B, S) hit matrix from the stored region boundaries
                    (range_intersects_region: exact, keys unique + globally
-                   sorted), bucket each probe record (lo, hi, filters) per
+                   sorted), bucket each probe record — just (lo, hi), the
+                   residual filters STAY on the origin shard — per
                    destination region with `bucket_rows`;
       2. ship    — one all_to_all moves every bucket to its region server;
-      3. answer  — local rank-find + gather + residual push-down on the
-                   received records, matches packed to the bucket front in
-                   key order;
-      4. return  — a second all_to_all routes (matches, counts, missed)
-                   back; the sender claims them by its recorded bucket
-                   slots and offset-composes counts in shard order, so a
-                   fat row spanning regions still concatenates exactly
-                   once, bit-identical to the broadcast path.
+      3. answer  — local rank-find + range gather on the received records.
+                   The in-range mask of a sorted-range gather is a
+                   front-aligned PREFIX, so the answer block needs no
+                   compaction at all before the return trip;
+      4. return  — a second all_to_all routes (raw range entries, counts,
+                   missed) back; the sender claims them by its recorded
+                   bucket slots, offset-composes counts in shard (= global
+                   key) order — gather-formulated (source block + in-block
+                   position per OUTPUT slot), because XLA serializes
+                   scatters on CPU hosts — and applies the residual
+                   filters it kept. A fat row spanning regions still
+                   concatenates exactly once, in key order.
+
+    Filtering at the origin instead of the region server: on this
+    static-shape substrate the return leg ships probe_cap-padded blocks
+    either way, so the paper's server-side predicate push-down saves no
+    wire bytes here — but pushing it past the collective means the answer
+    phase is a pure prefix gather (no sort/scatter compaction of
+    filter-holed masks, formerly the dominant cost of the whole routed
+    cascade on a host mesh), and the probe record shrinks to two keys.
+    Truncation semantics match the local `probe()` exactly: the first
+    probe_cap RANGE entries are considered and the rest are surfaced as
+    missed — under generous caps (no truncation anywhere) results stay
+    bit-identical to the broadcast path.
 
     Bucket overflow (more probes routed to one region than `bucket_cap`)
     drops the spilled copies and surfaces them in the returned missed
@@ -143,41 +150,47 @@ def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
     send = range_intersects_region(lo[:, None], hi[:, None],
                                    sp[None, :-1], sp[None, 1:])
     send = send & (hi > lo)[:, None]
-    (slo, shi, sflt), slot, drop_cnt = bucket_rows(
-        send, bucket_cap, [lo, hi, flt])
+    (slo, shi), slot, drop_cnt = bucket_rows(send, bucket_cap, [lo, hi])
     # --- ship probe records point-to-point (keys-only traffic, O(B)) ---
     rlo = _a2a(slo, axis).reshape(S * bucket_cap)
     rhi = _a2a(shi, axis).reshape(S * bucket_cap)
-    rflt = _a2a(sflt, axis).reshape(S * bucket_cap, 3)
     # --- answer locally (each record was routed here on purpose) ---
     k, valid, missed = gather_range(local_keys, rlo, rhi, probe_cap, impl)
-    valid = apply_residual(k, valid, rflt, msk, eq_positions)
-    ans, cnt = _pack_matches(k, valid, probe_cap)
-    # --- route matches home (matches-only traffic) ---
+    cnt = jnp.sum(valid, axis=-1).astype(jnp.int32)     # prefix length
+    ans = jnp.where(valid, k + 1, 0)                    # front-aligned; 0 == empty
+    # --- route raw range entries home (matches-only traffic) ---
     ANS = _a2a(ans.reshape(S, bucket_cap, probe_cap), axis)
     CNT = _a2a(cnt.reshape(S, bucket_cap), axis)
     MISS = _a2a(missed.reshape(S, bucket_cap), axis)
     # claim this shard's answers by bucket slot (block s answered shard s)
-    pad = lambda a: jnp.concatenate(
-        [a, jnp.zeros_like(a[:, :1])], axis=1)          # slot == cap -> 0
     dest = jnp.arange(S)[None, :]
-    cnt_bs = pad(CNT)[dest, slot]                       # (B, S)
-    miss_bs = pad(MISS)[dest, slot]
-    ans_bs = pad(ANS)[dest, slot]                       # (B, S, probe_cap)
+    claim_ok = slot < bucket_cap                        # dropped copies -> 0
+    sl = jnp.minimum(slot, bucket_cap - 1)
+    cnt_bs = jnp.where(claim_ok, CNT[dest, sl], 0)      # (B, S)
+    miss_bs = jnp.where(claim_ok, MISS[dest, sl], 0)
     # --- offset-compose counts in shard (= global key) order ---
-    off = jnp.cumsum(cnt_bs, axis=1) - cnt_bs
-    total = jnp.sum(cnt_bs, axis=1)
-    j = jnp.arange(probe_cap)[None, None, :]
-    live = j < cnt_bs[:, :, None]
-    pos = off[:, :, None] + j
-    keep = live & (pos < probe_cap)
-    pos = jnp.where(keep, pos, probe_cap)
-    buf = jnp.zeros((B, probe_cap + 1), jnp.int64)
-    buf = buf.at[jnp.arange(B)[:, None, None], pos].set(
-        jnp.where(keep, ans_bs, 0))
-    mine = buf[:, :probe_cap]
+    # gather-formulated, and DIRECT: resolve each OUTPUT slot p to its
+    # (source block, in-block position) from the counts alone, then gather
+    # the B x probe_cap selected entries straight out of the a2a answer
+    # buffer — never materializing the (B, S, probe_cap) claimed view (XLA
+    # serializes the scatter alternative on CPU hosts, and the full view
+    # is S x more memory traffic than the result).
+    cum = jnp.cumsum(cnt_bs, axis=1)                    # (B, S)
+    off = cum - cnt_bs
+    total = cum[:, -1]
+    p = jnp.arange(probe_cap)[None, :]                  # output slots (1, P)
+    src = jnp.sum((cum[:, :, None] <= p[:, None, :]).astype(jnp.int32),
+                  axis=1)                               # (B, P) source block
+    src = jnp.minimum(src, S - 1)
+    j = p - jnp.take_along_axis(off, src, axis=1)       # in-block position
+    slot_sel = jnp.take_along_axis(sl, src, axis=1)     # (B, P) bucket slot
+    mine = ANS.reshape(S * bucket_cap * probe_cap)[
+        (src * bucket_cap + slot_sel) * probe_cap + j]
+    mine = jnp.where(p < total[:, None], mine, 0)
     mv = mine > 0
     mk = jnp.where(mv, mine - 1, 0)
+    # --- residual predicate filtering, applied by the origin shard ---
+    mv = apply_residual(mk, mv, flt, msk, eq_positions)
     my_missed = (jnp.sum(miss_bs, axis=1) + jnp.maximum(total - probe_cap, 0)
                  + drop_cnt)
     return mk, mv, my_missed.astype(jnp.int32)
@@ -266,26 +279,12 @@ def dist_mapsin_step(bnd: Bindings, pattern, local_keys, probe_cap: int,
     return merge_bindings(bnd, plan, k, valid, missed, out_cap)
 
 
-def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
-                       row_cap: int, out_cap: int, axis: str,
-                       impl: str = "jnp", shard_splits=None,
-                       routing: str = "broadcast",
-                       bucket_cap: int = 0) -> Bindings:
-    """Algorithm 3, distributed: ONE row-GET round answers all star patterns
-    (saves n-1 collective rounds — the paper's n-1 GETs per mapping)."""
-    plans = [make_plan(p, bnd.vars) for p in patterns]
-    p0 = plans[0]
-    lo, hi = row_range(p0, bnd.table)
-    lo = jnp.where(bnd.valid, lo, 0)
-    hi = jnp.where(bnd.valid, hi, 0)
-    no_flt = jnp.zeros((bnd.capacity, 3), jnp.int64)
-    k, in_row, missed = dist_probe(lo, hi, no_flt, (False,) * 3, (),
-                                   local_keys, row_cap, axis, impl,
-                                   region=_my_region(shard_splits, axis),
-                                   routing=routing, splits=shard_splits,
-                                   bucket_cap=bucket_cap)
-    # local per-pattern filtering + iterative merge — reuse the local kernel
-    from repro.core import mapsin as local
+def _multiway_local_merge(bnd: Bindings, plans, k, in_row, missed,
+                          row_cap: int, out_cap: int) -> Bindings:
+    """Local tail of the multiway star join: per-pattern filtering of the
+    fetched row + iterative merge (Algorithm 3 lines after the GET). Shared
+    by the per-query distributed step and — vmapped over a leading query
+    axis — the batched serving path."""
     out = bnd
     cur_origin = jnp.arange(bnd.capacity, dtype=jnp.int32)
     for plan in plans:
@@ -316,6 +315,112 @@ def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
     overflow = out.overflow + jnp.sum(
         jnp.where(bnd.valid, missed, 0)).astype(jnp.int32)
     return Bindings(out.vars, out.table, out.valid, overflow)
+
+
+def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
+                       row_cap: int, out_cap: int, axis: str,
+                       impl: str = "jnp", shard_splits=None,
+                       routing: str = "broadcast",
+                       bucket_cap: int = 0) -> Bindings:
+    """Algorithm 3, distributed: ONE row-GET round answers all star patterns
+    (saves n-1 collective rounds — the paper's n-1 GETs per mapping)."""
+    plans = [make_plan(p, bnd.vars) for p in patterns]
+    p0 = plans[0]
+    lo, hi = row_range(p0, bnd.table)
+    lo = jnp.where(bnd.valid, lo, 0)
+    hi = jnp.where(bnd.valid, hi, 0)
+    no_flt = jnp.zeros((bnd.capacity, 3), jnp.int64)
+    k, in_row, missed = dist_probe(lo, hi, no_flt, (False,) * 3, (),
+                                   local_keys, row_cap, axis, impl,
+                                   region=_my_region(shard_splits, axis),
+                                   routing=routing, splits=shard_splits,
+                                   bucket_cap=bucket_cap)
+    return _multiway_local_merge(bnd, plans, k, in_row, missed, row_cap,
+                                 out_cap)
+
+
+# ---------------------------------------------------------------------------
+# Batched distributed steps (leading query axis — the sharded serving path)
+# ---------------------------------------------------------------------------
+#
+# A serving batch is Q independent queries of one template. Probing each
+# query through its own dist_probe would pay Q collective rounds per
+# cascade step; instead the (Q, cap) probe set is FLATTENED to one
+# (Q*cap,) record vector, routed through a single dist_probe (one
+# all_to_all pair on the a2a path — the whole batch shares the
+# collective), and the strictly-local merge is vmapped back over the
+# query axis. Bit-identical to running dist_probe per query: routing,
+# answering, and offset composition are per-record and order-preserving,
+# so flattening only concatenates independent probe sets.
+
+
+def dist_probe_batched(lo, hi, flt, msk, eq_positions, local_keys,
+                       probe_cap: int, axis: str, impl: str = "jnp",
+                       region=None, routing: str = "broadcast", splits=None,
+                       bucket_cap: int = 0):
+    """dist_probe over a leading query axis: lo/hi (Q, B), flt (Q, B, 3).
+    ONE collective round serves all Q queries; with routing="a2a" the
+    per-destination `bucket_cap` is sized for the whole flattened batch
+    (the serving engine amortizes the per-query tuned cap: batch x tuned).
+    Returns (k (Q, B, cap), valid (Q, B, cap), missed (Q, B))."""
+    q, b = lo.shape
+    k, valid, missed = dist_probe(
+        lo.reshape(q * b), hi.reshape(q * b), flt.reshape(q * b, 3), msk,
+        eq_positions, local_keys, probe_cap, axis, impl, region=region,
+        routing=routing, splits=splits, bucket_cap=bucket_cap)
+    return (k.reshape(q, b, probe_cap), valid.reshape(q, b, probe_cap),
+            missed.reshape(q, b))
+
+
+def batched_dist_mapsin_step(bnd: Bindings, pattern, local_keys,
+                             probe_cap: int, out_cap: int, axis: str,
+                             impl: str = "jnp", shard_splits=None,
+                             routing: str = "broadcast",
+                             bucket_cap: int = 0) -> Bindings:
+    """dist_mapsin_step over batched Bindings (table (Q, cap, nv), valid
+    (Q, cap), overflow (Q,)): one shared collective round, vmapped local
+    merge."""
+    from repro.core.mapsin import merge_bindings
+    q, cap, nv = bnd.table.shape
+    plan = make_plan(pattern, bnd.vars)
+    flat = bnd.table.reshape(q * cap, nv)
+    lo, hi = probe_ranges(plan, flat)
+    v = bnd.valid.reshape(q * cap)
+    lo = jnp.where(v, lo, 0)
+    hi = jnp.where(v, hi, 0)
+    flt, msk = residual_values(plan, flat)
+    k, valid, missed = dist_probe_batched(
+        lo.reshape(q, cap), hi.reshape(q, cap), flt.reshape(q, cap, 3), msk,
+        plan.eq_positions, local_keys, probe_cap, axis, impl,
+        region=_my_region(shard_splits, axis), routing=routing,
+        splits=shard_splits, bucket_cap=bucket_cap)
+    merge = lambda b, kk, vv, mm: merge_bindings(b, plan, kk, vv, mm, out_cap)
+    return jax.vmap(merge)(bnd, k, valid, missed)
+
+
+def batched_dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
+                               row_cap: int, out_cap: int, axis: str,
+                               impl: str = "jnp", shard_splits=None,
+                               routing: str = "broadcast",
+                               bucket_cap: int = 0) -> Bindings:
+    """dist_multiway_step over batched Bindings: the single row-GET round
+    is shared by the whole batch, the per-pattern merge tail is vmapped."""
+    q, cap, nv = bnd.table.shape
+    plans = [make_plan(p, bnd.vars) for p in patterns]
+    p0 = plans[0]
+    flat = bnd.table.reshape(q * cap, nv)
+    lo, hi = row_range(p0, flat)
+    v = bnd.valid.reshape(q * cap)
+    lo = jnp.where(v, lo, 0).reshape(q, cap)
+    hi = jnp.where(v, hi, 0).reshape(q, cap)
+    no_flt = jnp.zeros((q, cap, 3), jnp.int64)
+    k, in_row, missed = dist_probe_batched(
+        lo, hi, no_flt, (False,) * 3, (), local_keys, row_cap, axis, impl,
+        region=_my_region(shard_splits, axis), routing=routing,
+        splits=shard_splits, bucket_cap=bucket_cap)
+    merge = lambda b, kk, rr, mm: _multiway_local_merge(
+        b, plans, kk, rr, mm, row_cap, out_cap)
+    return jax.vmap(merge)(bnd, k, in_row, missed)
 
 
 # ---------------------------------------------------------------------------

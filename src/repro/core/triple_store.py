@@ -102,6 +102,21 @@ class TripleStore:
     def splits(self, index: int) -> jnp.ndarray:
         return self.splits_spo if index == SPO else self.splits_ops
 
+    @property
+    def layout_key(self) -> tuple:
+        """Hashable shard-layout identity: shard shape + the actual region
+        boundaries of both indexes. A compiled cascade bakes the splits in
+        as constants, so any compile cache keyed on the store MUST include
+        this — rebuilding or resharding the store (different boundaries)
+        changes the key and can never reuse a stale compilation."""
+        ck = ("layout_key",)
+        if ck not in self.plan_cache:
+            self.plan_cache[ck] = (
+                self.num_shards, self.shard_cap, self.n_triples,
+                tuple(int(x) for x in np.asarray(self.splits_spo)),
+                tuple(int(x) for x in np.asarray(self.splits_ops)))
+        return self.plan_cache[ck]
+
     def storage_bytes(self) -> int:
         return int(self.keys_spo.size + self.keys_ops.size) * 8
 

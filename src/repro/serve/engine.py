@@ -18,19 +18,40 @@ tenant asks "students of <their> department"). The engine exploits that:
   template, pads each bucket to a power-of-two batch (bounded compile
   shapes), runs one bucket per ``step()``, and applies admission
   control: ``submit`` rejects with ``EngineBusy`` beyond ``max_queue``,
-  a dispatch takes at most ``max_batch`` requests. Compiled batched
-  cascades live in an ``LRUCache`` so a many-template tenant mix cannot
-  grow compile memory forever.
+  a dispatch takes at most ``max_batch`` requests; a ``min_batch`` /
+  ``max_wait_s`` policy (aging override) can defer sub-batch dispatches
+  so capacity near saturation is not burned on tiny batches. Compiled
+  batched cascades live in an ``LRUCache`` so a many-template tenant
+  mix cannot grow compile memory forever.
+
+* **Sharded serving** (the production shape, DESIGN.md §4/§5): with a
+  ``mesh`` the engine lifts the template cascade under ``shard_map``
+  over the region-sharded store. Each shard seeds the batch from its
+  own key slice (vmapped seed scan — local), then every cascade step
+  flattens the per-slot probe records of ALL queries in the batch,
+  routes them via the stored region splits, and ships them with ONE
+  ``all_to_all`` pair (``dist_probe_batched``) before a vmapped local
+  merge scatters matches back to per-query slots — the batch shares
+  the collective, not just the compilation. With ``routing="a2a"`` and
+  ``a2a_bucket_cap == 0`` every dispatch's caps come from measurement,
+  amortized across the batch: per-destination probe buckets are the
+  SUM of the members' tuned caps (``tune_a2a_bucket_cap``, cached per
+  distinct query — the exact drop-free bound) and the answer return
+  legs the MAX of their measured per-step range lengths
+  (``tuned_step_answer_caps``), both quantized to bound compile
+  diversity.
 
 Results are per-slot Bindings — bit-identical row sets to
 ``execute_local`` on the same (patterns, cfg), which tests verify
-against ``execute_oracle`` as well. MAPSIN mode only: reduce-side
-re-scans relations with an empty domain, which a seeded-constant
-template cannot express.
+against ``execute_oracle`` as well (sharded results keep ``out_cap``
+rows PER SHARD, like ``execute_sharded``). MAPSIN mode only:
+reduce-side re-scans relations with an empty domain, which a
+seeded-constant template cannot express.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Sequence
 
@@ -39,7 +60,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mapsin as ms
-from repro.core.bgp import ExecConfig, Step, plan_steps
+from repro.core.bgp import (ExecConfig, Step, apply_dist_step,
+                            mesh_fingerprint, plan_steps,
+                            tune_a2a_bucket_cap, tuned_step_answer_caps)
 from repro.core.mapsin import Bindings, apply_residual, compact
 from repro.core.plan import make_plan, probe_ranges, residual_values
 from repro.core.rdf import Pattern, is_var, unpack3
@@ -174,6 +197,11 @@ class _Request:
     var_order: tuple[str, ...]
     select: tuple[str, ...] | None
     arrival: float | None = None    # harness-stamped, for latency accounting
+    enq: float = 0.0                # enqueue clock (arrival if stamped, else
+                                    # monotonic) — feeds the max_wait_s aging
+    tuned: int = 0                  # this query's tuned a2a bucket cap
+                                    # (0 = untuned / not applicable)
+    step_caps: tuple | None = None  # measured per-join-step answer caps
 
 
 def _pow2_at_least(n: int) -> int:
@@ -190,18 +218,37 @@ class ServeEngine:
     a request; ``step`` dispatches ONE batched cascade for the fullest
     template bucket; ``drain``/``execute`` run to completion. Results are
     per-request ``QueryResult``s whose row sets equal ``execute_local``.
+
+    With ``mesh`` (store sharded to the mesh size on ``axis``) every
+    dispatch is ONE ``shard_map`` cascade against the region-sharded
+    store; per-batch, not per-query, collective overhead (module
+    docstring). ``min_batch``/``max_wait_s``: ``step`` defers while the
+    fullest bucket is below ``min_batch`` UNLESS the oldest queued
+    request has waited ``max_wait_s`` (then its bucket dispatches as-is)
+    — latency-bounded batch aggregation; the defaults (1, 0.0) keep the
+    greedy always-dispatch behavior.
     """
 
     def __init__(self, store: TripleStore, dictionary=None,
                  cfg: ExecConfig = ExecConfig(), mode: str = "mapsin",
                  max_batch: int = 32, max_queue: int = 256,
-                 compile_cache_size: int = 32, starvation_limit: int = 4):
+                 compile_cache_size: int = 32, starvation_limit: int = 4,
+                 mesh=None, axis: str = "data",
+                 min_batch: int = 1, max_wait_s: float = 0.0):
         if mode != "mapsin":
             raise ValueError("ServeEngine serves the MAPSIN path only "
                              "(reduce-side re-scans need an empty domain)")
+        if mesh is not None and store.num_shards != int(mesh.shape[axis]):
+            raise ValueError(
+                f"store has {store.num_shards} shards but mesh axis "
+                f"{axis!r} has {int(mesh.shape[axis])} devices")
+        if min_batch > max_batch:
+            raise ValueError("min_batch cannot exceed max_batch")
         self.store, self.dictionary = store, dictionary
         self.cfg, self.mode = cfg, mode
+        self.mesh, self.axis = mesh, axis
         self.max_batch, self.max_queue = max_batch, max_queue
+        self.min_batch, self.max_wait_s = min_batch, max_wait_s
         self._compiled = LRUCache(compile_cache_size)
         self._signatures = LRUCache(max(4 * compile_cache_size, 64))
         # template interning: hashing a Template (a whole step tuple) per
@@ -215,6 +262,8 @@ class ServeEngine:
                                         # request's bucket was passed over
         self.dispatches = 0             # batched cascade invocations
         self.dispatched_queries = 0     # requests served by them
+        self.a2a_payload_bytes = 0      # static per-shard a2a collective
+                                        # payload shipped by dispatches
 
     # --- admission -------------------------------------------------------
 
@@ -240,29 +289,134 @@ class ServeEngine:
             raise ValueError("empty query")
         if len(self._queue) >= self.max_queue:
             raise EngineBusy(f"queue depth {len(self._queue)} at max_queue")
-        sig_key = ("sig", patterns)
+        # cfg is part of the signature key: planning (reorder/multiway
+        # grouping) depends on it, so a config change must re-plan
+        sig_key = ("sig", patterns, self.cfg)
         hit = self._signatures.get(sig_key)
         if hit is None:
             template, consts, var_order = plan_signature(
                 self.store, patterns, self.cfg, self.mode)
             tid = self._template_ids.setdefault(template,
                                                 len(self._template_ids))
-            hit = (tid, template, consts, var_order)
+            tuned, step_caps = self._maybe_tune(patterns)
+            hit = (tid, template, consts, var_order, tuned, step_caps)
             self._signatures[sig_key] = hit
-        tid, template, consts, var_order = hit
+        tid, template, consts, var_order, tuned, step_caps = hit
         rid = self._next_rid
         self._next_rid += 1
+        enq = arrival if arrival is not None else time.monotonic()
         self._queue.append(_Request(rid, tid, template, consts, var_order,
-                                    select, arrival))
+                                    select, arrival, enq, tuned, step_caps))
         return rid
 
     # --- batched execution ----------------------------------------------
 
-    def _compiled_batch(self, tid: int, template: Template, batch: int):
-        key = ("batched", tid, batch)
+    def _maybe_tune(self, patterns) -> tuple:
+        """Measured tuning, amortized two ways: the tuning run itself is
+        per DISTINCT query (first submit only — cached on the store,
+        exactly the cost execute_sharded pays per query), and the values
+        size every batch the query ever rides in. Returns (bucket cap,
+        per-join-step answer caps): the bucket caps SUM across batch
+        members (_bucket_cap_for), the answer caps MAX across them
+        (_step_caps_for — the a2a return leg is per probe, so the widest
+        member's measured range bounds everyone). ((0, None) when tuning
+        is off.)"""
+        if (self.mesh is None or self.cfg.routing != "a2a"
+                or self.cfg.a2a_bucket_cap > 0):
+            return 0, None
+        tuned = tune_a2a_bucket_cap(self.store, patterns, self.cfg,
+                                    self.store.num_shards)
+        step_caps = tuned_step_answer_caps(self.store, patterns, self.cfg,
+                                           self.store.num_shards)
+        return tuned, step_caps
+
+    @staticmethod
+    def _quantize_cap(cap: int) -> int:
+        """Round a bucket cap UP onto the {2^k, 3*2^(k-1)} grid (8, 12,
+        16, 24, 32, 48, ...): dispatch caps are compile-time constants,
+        so free-form sums would compile a cascade per distinct batch
+        composition; two sizes per octave bounds compile diversity at
+        <= 33% capacity overshoot."""
+        if cap <= 8:
+            return 8
+        k = 1 << (cap - 1).bit_length()            # next pow2 >= cap
+        return (3 * k) // 4 if cap <= (3 * k) // 4 else k
+
+    def _bucket_cap_for(self, reqs: list, batch: int) -> int:
+        """Per-destination a2a probe-bucket capacity for ONE dispatch: the
+        SUM of the members' tuned caps (+ padding slots at the replicated
+        request-0 cap), quantized. The sum is the exact drop-free bound
+        for the batch — the per-(sender, region) load is at most
+        sum_q L_q — and stays tight when queries of very different
+        fan-outs share a template shape (the rdf:type-style heavy variant
+        no longer inflates every sibling's dispatch the way a per-template
+        max would). Clamped at batch x out_cap, the structural bound (a
+        query never routes more probes than out_cap bindings per shard).
+        """
+        if self.mesh is None or self.cfg.routing != "a2a":
+            return 0
+        if self.cfg.a2a_bucket_cap > 0:
+            per_query = min(self.cfg.a2a_bucket_cap, self.cfg.out_cap)
+            return batch * per_query
+        # untuned slots (possible only when a request was admitted under a
+        # different cfg than it dispatches with) fall back to the drop-free
+        # out_cap bound
+        tuned = [r.tuned if r.tuned > 0 else self.cfg.out_cap for r in reqs]
+        total = sum(tuned) + (batch - len(reqs)) * (tuned[0] if tuned
+                                                    else self.cfg.out_cap)
+        return min(self._quantize_cap(total), batch * self.cfg.out_cap)
+
+    def _step_caps_for(self, reqs: list, template: Template) -> tuple:
+        """Per-join-step a2a answer caps for one dispatch: the MAX of the
+        members' measured range lengths per step (quantized; a probe's
+        answers are per probe, not per batch), min'd with the configured
+        probe/row caps — never looser than the config, and falling back
+        to it for unmeasured members. Right-sizes the dominant return-leg
+        payload: a point-probe step ships 8 key slots per routed probe
+        instead of the configured probe_cap."""
+        cfg_caps = tuple(self.cfg.row_cap if st.kind == "multiway"
+                         else self.cfg.probe_cap
+                         for st in template.steps[1:])
+        if (self.mesh is None or self.cfg.routing != "a2a"
+                or self.cfg.a2a_bucket_cap > 0):
+            return cfg_caps
+        caps = list(cfg_caps)
+        for i, dflt in enumerate(cfg_caps):
+            measured = [r.step_caps[i] for r in reqs
+                        if r.step_caps is not None and i < len(r.step_caps)]
+            if measured and len(measured) == len(reqs):
+                caps[i] = min(self._quantize_cap(max(measured)), dflt)
+        return tuple(caps)
+
+    def _payload_bytes(self, bucket_cap: int, step_caps: tuple) -> int:
+        """Static per-shard a2a collective payload for one dispatch (same
+        convention as benchmarks/bench_distributed: records out + answers
+        back, the local diagonal block excluded — it never crosses the
+        network)."""
+        if self.mesh is None or self.cfg.routing != "a2a":
+            return 0
+        s = self.store.num_shards
+        total = 0
+        for cap in step_caps:
+            total += (s - 1) * bucket_cap * (8 + 8)             # lo/hi out
+            total += (s - 1) * bucket_cap * (cap * 8 + 4 + 4)   # ans/cnt/miss
+        return total
+
+    def _compiled_batch(self, tid: int, template: Template, batch: int,
+                        bucket_cap: int, step_caps: tuple):
+        # full ExecConfig + mesh identity + store shard layout (+ the
+        # resolved bucket/answer caps, compile-time constants) key the
+        # cache: toggling routing/caps, re-pointing at a resharded store,
+        # or re-sized buckets can never reuse a stale compiled cascade
+        mesh_id = (None if self.mesh is None
+                   else mesh_fingerprint(self.mesh, self.axis))
+        key = ("batched", tid, batch, self.cfg, mesh_id,
+               self.store.layout_key, bucket_cap, step_caps)
         hit = self._compiled.get(key)
         if hit is None:
-            hit = self._build(template, batch)
+            hit = (self._build_sharded(template, batch, bucket_cap,
+                                       step_caps)
+                   if self.mesh is not None else self._build(template, batch))
             self._compiled[key] = hit
         return hit
 
@@ -292,6 +446,79 @@ class ServeEngine:
         donate = (3,) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(batched, donate_argnums=donate), scratch_vars
 
+    def _build_sharded(self, template: Template, batch: int,
+                       bucket_cap: int, step_caps: tuple):
+        """The tentpole: one shard_map dispatch serves the whole batch
+        against the region-sharded store. Inside the per-shard body the
+        seed scan is vmapped over the batch against the LOCAL key slice
+        (no collective — each shard seeds what it owns, exactly like
+        execute_sharded's scan), then every cascade step routes the
+        flattened per-slot probe records of ALL queries through ONE
+        dist_probe collective round (apply_dist_step(batched=True)) and
+        vmaps the merge back to per-query slots. Returns a jitted
+        (keys_spo (S, cap), keys_ops (S, cap), consts (batch, n_consts))
+        -> (table (S, batch, out_cap, nv), valid, overflow (S, batch))."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        if cfg.routing == "a2a":
+            cfg = dataclasses.replace(cfg, a2a_bucket_cap=bucket_cap)
+        steps, const_vars = template.steps, template.const_vars
+        first = steps[0].patterns[0]
+        first_plan = make_plan(first, const_vars)
+        scratch_vars = const_vars + first_plan.out_var_names
+        splits_spo = np.asarray(self.store.splits_spo)
+        splits_ops = np.asarray(self.store.splits_ops)
+        axis = self.axis
+
+        def fn(keys_spo, keys_ops, consts):
+            keys_spo = keys_spo.reshape(-1)
+            keys_ops = keys_ops.reshape(-1)
+            keys_of = lambda pat, dom: (
+                keys_spo if make_plan(pat, dom).index == 0 else keys_ops)
+            splits_of = lambda pat, dom: (
+                splits_spo if make_plan(pat, dom).index == 0 else splits_ops)
+            seed_keys = keys_of(first, const_vars)
+            scr = self._scratch(scratch_vars, batch)
+            bnd = jax.vmap(
+                lambda c, s: _seed_scan(first, const_vars, seed_keys, c,
+                                        cfg.out_cap, cfg.impl, s))(consts, scr)
+            for i, st in enumerate(steps[1:]):
+                keys = keys_of(st.patterns[0], bnd.vars)
+                # measured per-step answer cap (right-sized return leg)
+                scfg = dataclasses.replace(cfg, probe_cap=step_caps[i],
+                                           row_cap=step_caps[i])
+                bnd = apply_dist_step(
+                    bnd, st, keys, splits_of(st.patterns[0], bnd.vars),
+                    scfg, axis, batched=True)
+            return bnd.table[None], bnd.valid[None], bnd.overflow[None]
+
+        sharded = shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(P(axis, None), P(axis, None), P(None, None)),
+            out_specs=(P(axis, None, None, None), P(axis, None, None),
+                       P(axis, None)),
+            check_rep=False)
+        return jax.jit(sharded), scratch_vars
+
+    def _dispatch(self, tid: int, template: Template, batch: int,
+                  consts: np.ndarray, bucket_cap: int, step_caps: tuple):
+        """Run one compiled batched cascade; returns per-shard numpy views
+        (tables (S, batch, out_cap, nv), valids (S, batch, out_cap),
+        overflow (S, batch)) — S == 1 on the local (mesh-less) path."""
+        jitted, scratch_vars = self._compiled_batch(tid, template, batch,
+                                                    bucket_cap, step_caps)
+        if self.mesh is None:
+            out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
+                         jnp.asarray(consts),
+                         self._scratch(scratch_vars, batch))
+            return (np.asarray(out.table)[None], np.asarray(out.valid)[None],
+                    np.asarray(out.overflow)[None])
+        t, v, o = jitted(self.store.keys_spo, self.store.keys_ops,
+                         jnp.asarray(consts))
+        self.a2a_payload_bytes += self._payload_bytes(bucket_cap, step_caps)
+        return np.asarray(t), np.asarray(v), np.asarray(o)
+
     def precompile(self, query, batches: Sequence[int] | None = None):
         """Compile (and warm) the query's template cascade for the given
         batch sizes — default every power of two up to max_batch — by
@@ -309,18 +536,23 @@ class ServeEngine:
         template, _, _ = plan_signature(self.store, patterns, self.cfg,
                                         self.mode)
         tid = self._template_ids.setdefault(template, len(self._template_ids))
+        tuned, step_caps = self._maybe_tune(patterns)
         if batches is None:
             batches = []
             b = 1
             while b <= self.max_batch:
                 batches.append(b)
                 b <<= 1
+        payload0 = self.a2a_payload_bytes
         for b in batches:
-            jitted, scratch_vars = self._compiled_batch(tid, template, b)
-            out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
-                         jnp.zeros((b, template.n_consts), jnp.int32),
-                         self._scratch(scratch_vars, b))
-            jax.block_until_ready((out.table, out.valid, out.overflow))
+            # warm the uniform-batch cap sizes for this query's tuned caps
+            fake = [_Request(-1, tid, template, None, (), None, tuned=tuned,
+                             step_caps=step_caps) for _ in range(b)]
+            self._dispatch(tid, template, b,
+                           np.zeros((b, template.n_consts), np.int32),
+                           self._bucket_cap_for(fake, b),
+                           self._step_caps_for(fake, template))
+        self.a2a_payload_bytes = payload0      # warm-up ships no live traffic
 
     def _scratch(self, scratch_vars: tuple[str, ...], batch: int) -> Bindings:
         return Bindings(
@@ -333,33 +565,45 @@ class ServeEngine:
         template = reqs[0].template
         n = len(reqs)
         batch = min(_pow2_at_least(n), self.max_batch)
-        jitted, scratch_vars = self._compiled_batch(reqs[0].tid, template,
-                                                    batch)
         consts = np.zeros((batch, template.n_consts), np.int32)
         for i, r in enumerate(reqs):
             consts[i] = r.consts
         for i in range(n, batch):                    # padding slots re-run
             consts[i] = reqs[0].consts               # request 0, discarded
-        out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
-                     jnp.asarray(consts), self._scratch(scratch_vars, batch))
-        table = np.asarray(out.table)                # (batch, out_cap, nv)
-        valid = np.asarray(out.valid)
-        overflow = np.asarray(out.overflow)
+        # (S, batch, out_cap, nv) per-shard tables; S == 1 without a mesh
+        tables, valids, overflow = self._dispatch(
+            reqs[0].tid, template, batch, consts,
+            self._bucket_cap_for(reqs, batch),
+            self._step_caps_for(reqs, template))
         nk = template.n_consts
         self.dispatches += 1
         self.dispatched_queries += n
         results = []
         for i, r in enumerate(reqs):
-            rows = table[i][valid[i]][:, nk:nk + len(r.var_order)]
+            rows = np.concatenate([tables[s, i][valids[s, i]]
+                                   for s in range(tables.shape[0])]
+                                  )[:, nk:nk + len(r.var_order)]
             results.append(QueryResult(r.rid, r.var_order, rows,
-                                       int(overflow[i]), r.select))
+                                       int(overflow[:, i].sum()), r.select))
         return results
 
     # --- scheduling ------------------------------------------------------
 
-    def step(self) -> list[QueryResult]:
+    def step(self, now: float | None = None,
+             force: bool = False) -> list[QueryResult]:
         """Dispatch the fullest template bucket (at most max_batch
         requests) as one batched cascade; [] when the queue is empty.
+
+        Dispatch policy (min_batch/max_wait_s): when the fullest bucket
+        is below `min_batch`, the dispatch is DEFERRED (returns [] with
+        requests still pending) so capacity near saturation is not burned
+        on tiny batches — UNLESS the oldest queued request has already
+        waited `max_wait_s` on the `now` clock (arrival-stamped requests
+        use the harness clock, others time.monotonic), in which case its
+        bucket dispatches as-is: the aging override bounds worst-case
+        queueing latency at max_wait_s + one dispatch. `force=True`
+        (drain) bypasses the policy. The defaults (min_batch=1) keep the
+        greedy always-dispatch behavior.
 
         Anti-starvation aging: fullest-first alone would let a steady
         majority template starve a minority request forever. After the
@@ -378,6 +622,13 @@ class ServeEngine:
         else:
             # fullest bucket first; FIFO within a bucket (deque order)
             pick = max(buckets.values(), key=len)
+        if not force and len(pick) < self.min_batch:
+            if now is None:
+                now = time.monotonic()
+            if now - self._queue[0].enq < self.max_wait_s:
+                return []                 # defer: let the batch fill
+            pick = buckets[head_tid]      # aged past max_wait_s: serve the
+                                          # oldest request's bucket as-is
         chosen = pick[:self.max_batch]
         if chosen[0].tid == head_tid:
             self._head_skips = 0
@@ -390,7 +641,7 @@ class ServeEngine:
     def drain(self) -> list[QueryResult]:
         out: list[QueryResult] = []
         while self._queue:
-            out.extend(self.step())
+            out.extend(self.step(force=True))
         return out
 
     def execute(self, queries) -> list[QueryResult]:

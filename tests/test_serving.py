@@ -1,6 +1,10 @@
 """Batched serving engine: per-slot results must be bit-identical to
 execute_local (and the oracle); scheduler buckets by plan signature;
-admission control + compile-cache bounding behave as configured."""
+admission control + compile-cache bounding behave as configured; the
+sharded (mesh) path is covered on a degenerate single-device mesh here
+(fast tier) and on a forced 8-device mesh in test_multidevice.py."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -200,6 +204,78 @@ def test_engine_rejects_reduce_mode_and_textless_dictionary(rng):
     eng = ServeEngine(store, cfg=CFG)             # no dictionary
     with pytest.raises(ValueError):
         eng.submit("SELECT ?x WHERE { ?x a <Student> . }")
+
+
+def test_min_batch_defers_until_aged(rng):
+    """min_batch/max_wait_s policy: sub-min_batch buckets defer, the aging
+    override dispatches the oldest request's bucket past max_wait_s, and a
+    bucket reaching min_batch dispatches immediately."""
+    store = build_store(random_graph(rng), 1)
+    eng = ServeEngine(store, cfg=CFG, max_batch=8, min_batch=4,
+                      max_wait_s=5.0)
+    for c in (1, 2):
+        eng.submit([Pattern("?x", 101, c)], arrival=0.0)
+    assert eng.step(now=1.0) == []                # below min_batch, young
+    assert eng.pending() == 2
+    aged = eng.step(now=6.0)                      # oldest aged past 5 s
+    assert len(aged) == 2 and eng.pending() == 0
+    for c in range(4):
+        eng.submit([Pattern("?x", 101, c)], arrival=10.0)
+    assert len(eng.step(now=10.0)) == 4           # min_batch met: no wait
+
+
+def test_drain_forces_dispatch_below_min_batch(rng):
+    store = build_store(random_graph(rng), 1)
+    eng = ServeEngine(store, cfg=CFG, max_batch=8, min_batch=8,
+                      max_wait_s=1e9)
+    pats = [Pattern("?x", 101, 3)]
+    eng.submit(pats, arrival=0.0)
+    assert eng.step(now=0.0) == []                # policy defers...
+    res = eng.drain()                             # ...drain overrides
+    assert len(res) == 1
+    assert res[0].rows_set() == _local_set(store, pats, res[0].vars)
+    with pytest.raises(ValueError):               # malformed policy
+        ServeEngine(store, cfg=CFG, max_batch=4, min_batch=8)
+
+
+def test_compile_cache_key_includes_config(rng):
+    """Toggling the engine's ExecConfig must never reuse a compiled
+    cascade built for the old config (the key carries the full config)."""
+    store = build_store(random_graph(rng), 1)
+    eng = ServeEngine(store, cfg=CFG)
+    pats = [Pattern("?x", 101, 7), Pattern("?x", 102, "?y")]
+    eng.execute([pats])
+    assert len(eng._compiled) == 1
+    eng.cfg = dataclasses.replace(CFG, probe_cap=max(CFG.probe_cap // 2, 2))
+    res = eng.execute([pats])[0]
+    assert len(eng._compiled) == 2                # distinct entry, no reuse
+    assert res.rows_set() == _local_set(store, pats, res.vars)
+
+
+def test_sharded_engine_degenerate_mesh_a2a(rng):
+    """Single-device mesh, routing="a2a": the batched shard_map cascade
+    (one all_to_all pair per step shared by the whole batch) on a 1-shard
+    store must be row-identical to execute_local — the fast-tier cover
+    for the forced-8-device test in test_multidevice.py."""
+    import jax
+    from jax.sharding import Mesh
+    tr = random_graph(rng, n=400)
+    store = build_store(tr, 1)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    cfg = dataclasses.replace(CFG, routing="a2a", a2a_bucket_cap=0)
+    eng = ServeEngine(store, cfg=cfg, mesh=mesh, max_batch=8)
+    queries = [[Pattern("?x", 101, c), Pattern("?x", 102, "?y")]
+               for c in (1, 5, 9, 13)]
+    queries.append([Pattern("?x", 101, 3), Pattern("?x", 102, "?a"),
+                    Pattern("?x", 103, "?b")])    # multiway star template
+    results = eng.execute(queries)
+    assert eng.dispatches == 2                    # two templates, one each
+    for pats, res in zip(queries, results):
+        assert res.rows_set() == _local_set(store, pats, res.vars)
+        assert res.overflow == 0
+    # mesh size must match the store's sharding
+    with pytest.raises(ValueError):
+        ServeEngine(build_store(tr, 2), cfg=cfg, mesh=mesh)
 
 
 def test_minority_template_is_not_starved(rng):

@@ -17,7 +17,10 @@ from repro.core import (ExecConfig, Pattern, build_store, execute_local,
 from repro.core.bgp import query_traffic_actual, rows_set
 from repro.core.distributed import auto_bucket_cap, bucket_rows
 
-REC, MATCH = 44, 12  # probe record / returned match bytes (bgp.py)
+# probe record bytes (bgp.py): routed records are lo/hi + origin (the
+# residual filters stay on the origin shard, PR 4); broadcast all_gathers
+# the filters too. MATCH: returned match bytes.
+REC_ROUTED, REC_BCAST, MATCH = 20, 44, 12
 
 
 def _stats(deliveries=12, route_shards=4, n_in=10, n_out=5):
@@ -32,8 +35,8 @@ def _stats(deliveries=12, route_shards=4, n_in=10, n_out=5):
 def test_routed_uses_measured_deliveries_when_shards_match():
     out = query_traffic_actual(_stats(deliveries=12, route_shards=4),
                                "mapsin_routed", 4, n_triples=100)
-    assert out["probe_bytes_routed"] == 12 * REC
-    assert out["network"] == 12 * REC + 5 * MATCH
+    assert out["probe_bytes_routed"] == 12 * REC_ROUTED
+    assert out["network"] == 12 * REC_ROUTED + 5 * MATCH
 
 
 def test_routed_falls_back_to_n_in_on_shard_mismatch():
@@ -41,25 +44,25 @@ def test_routed_falls_back_to_n_in_on_shard_mismatch():
                                "mapsin_routed", 8, n_triples=100)
     # measured fan-out was for a 4-region layout; for 8 shards it
     # substitutes n_in (broadcast-equivalent, one delivery per probe)
-    assert out["probe_bytes_routed"] == 10 * REC
-    assert out["network"] == 10 * REC + 5 * MATCH
+    assert out["probe_bytes_routed"] == 10 * REC_ROUTED
+    assert out["network"] == 10 * REC_ROUTED + 5 * MATCH
 
 
 def test_routed_falls_back_when_deliveries_missing():
     out = query_traffic_actual(_stats(route_shards=None),
                                "mapsin_routed", 4, n_triples=100)
-    assert out["probe_bytes_routed"] == 10 * REC
+    assert out["probe_bytes_routed"] == 10 * REC_ROUTED
 
 
 def test_broadcast_bytes_scale_with_cluster_size():
     for s in (2, 4, 10):
         out = query_traffic_actual(_stats(route_shards=4), "mapsin", s,
                                    n_triples=100)
-        assert out["probe_bytes_broadcast"] == 10 * REC * (s - 1)
-        assert out["network"] == 10 * REC * (s - 1) + 5 * MATCH
+        assert out["probe_bytes_broadcast"] == 10 * REC_BCAST * (s - 1)
+        assert out["network"] == 10 * REC_BCAST * (s - 1) + 5 * MATCH
     # routed probe bytes are reported alongside regardless of mode
     out = query_traffic_actual(_stats(route_shards=4), "mapsin", 4, 100)
-    assert out["probe_bytes_routed"] == 12 * REC
+    assert out["probe_bytes_routed"] == 12 * REC_ROUTED
 
 
 def test_measured_stats_feed_routed_accounting():
@@ -79,13 +82,14 @@ def test_measured_stats_feed_routed_accounting():
                                     store.n_triples)
     fallback = query_traffic_actual(stats, "mapsin_routed", 5,
                                     store.n_triples)
-    want_measured = sum(st["deliveries"] * REC * st["n_patterns"]
+    want_measured = sum(st["deliveries"] * REC_ROUTED * st["n_patterns"]
                         for st in joins)
-    want_fallback = sum(st["n_in"] * REC * st["n_patterns"] for st in joins)
+    want_fallback = sum(st["n_in"] * REC_ROUTED * st["n_patterns"] for st in joins)
     assert measured["probe_bytes_routed"] == want_measured
     assert fallback["probe_bytes_routed"] == want_fallback
     # broadcast pays (S-1)x on every probe record
-    assert measured["probe_bytes_broadcast"] == want_fallback * 2
+    want_bcast = sum(st["n_in"] * REC_BCAST * st["n_patterns"] for st in joins)
+    assert measured["probe_bytes_broadcast"] == want_bcast * 2
 
 
 # ---------------------------------------------------------------------------
