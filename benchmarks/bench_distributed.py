@@ -40,22 +40,19 @@ SP2B_QUERIES = ("Q3a", "Q10")
 def _mesh_main(emit=print, lubm_queries=LUBM_QUERIES,
                sp2b_queries=SP2B_QUERIES, repeats: int = 3):
     """Body that runs INSIDE the 8-device process."""
-    import dataclasses
-
     import jax
     import numpy as np
     from jax.sharding import Mesh
 
-    from repro.core import ExecConfig, build_store, execute_local
-    from repro.core.bgp import (execute_sharded, plan_steps,
+    from repro.core import Caps, ExecConfig, build_store, execute_local
+    from repro.core.bgp import (compile_plan, execute_sharded,
                                 query_traffic_actual, rows_set)
     from repro.data import lubm_like, sp2b_like
 
     assert jax.device_count() >= NUM_SHARDS, jax.devices()
     mesh = Mesh(np.array(jax.devices()[:NUM_SHARDS]), ("data",))
-    cfg = ExecConfig(scan_cap=1 << 14, out_cap=1 << 12, probe_cap=64,
-                     row_cap=64, bucket_cap=1 << 11,
-                     route_shards=NUM_SHARDS)
+    caps = Caps(scan_cap=1 << 14, out_cap=1 << 12, probe_cap=64,
+                row_cap=64, bucket_cap=1 << 11)
 
     def timed(fn):
         jax.block_until_ready(fn())                     # compile
@@ -66,25 +63,26 @@ def _mesh_main(emit=print, lubm_queries=LUBM_QUERIES,
             ts.append(time.perf_counter() - t0)
         return min(ts)
 
-    def payload_bytes(steps, routing: str) -> int:
+    def payload_bytes(plan, routing: str) -> int:
         """Static bytes one shard ships per execution through the probe
-        collectives (the padded buffers all_gather/all_to_all move). One
-        convention for both routings: the local block — the all_to_all
-        diagonal / this shard's own all_gather contribution / the
-        psum_scatter chunk that stays home — never crosses the network and
-        is excluded everywhere."""
+        collectives (the padded buffers all_gather/all_to_all move), from
+        the plan's OWN embedded per-step caps. One convention for both
+        routings: the local block — the all_to_all diagonal / this shard's
+        own all_gather contribution / the psum_scatter chunk that stays
+        home — never crosses the network and is excluded everywhere."""
         from repro.core.distributed import auto_bucket_cap
-        s, b = NUM_SHARDS, cfg.out_cap
+        s = NUM_SHARDS
         total = 0
-        for st in steps:
+        for st in plan.steps:
             if st.kind == "scan":
                 continue
-            cap = cfg.row_cap if st.kind == "multiway" else cfg.probe_cap
+            b = st.caps.out_cap
+            cap = (st.caps.row_cap if st.kind == "multiway"
+                   else st.caps.probe_cap)
             if routing == "a2a":
-                bc = cfg.a2a_bucket_cap or auto_bucket_cap(b, s)
-                rec = (s - 1) * bc * (8 + 8)            # lo/hi buckets out
-                back = (s - 1) * bc * (cap * 8 + 4 + 4)  # matches/cnt/missed
-                total += rec + back
+                from repro.core.bgp import a2a_step_payload_bytes
+                bc = st.caps.a2a_bucket_cap or auto_bucket_cap(b, s)
+                total += a2a_step_payload_bytes(bc, cap, s)
             else:
                 rec = (s - 1) * b * (8 + 8 + 24)        # all_gather probes
                 cnts = (s - 1) * s * b * 4              # all_gather counts
@@ -100,24 +98,27 @@ def _mesh_main(emit=print, lubm_queries=LUBM_QUERIES,
         local_store = build_store(tr, num_shards=1)
         for qname in queries:
             pats = qs[qname]
-            res, rows = {}, {}
+            res, rows, plans = {}, {}, {}
             for routing in ("broadcast", "a2a"):
-                rcfg = dataclasses.replace(cfg, routing=routing)
+                rcfg = ExecConfig(routing=routing)
                 t, v, ovf, vars_ = execute_sharded(store, pats, mesh,
-                                                   "mapsin", rcfg)
+                                                   "mapsin", rcfg, caps=caps)
                 rows[routing] = rows_set(t, v, len(vars_))
                 res[routing] = timed(lambda c=rcfg: execute_sharded(
-                    store, pats, mesh, "mapsin", c))
+                    store, pats, mesh, "mapsin", c, caps=caps))
                 res[routing + "_ovf"] = int(np.asarray(ovf).sum())
+                plans[routing] = compile_plan(store, pats, caps,
+                                              routing=routing,
+                                              num_shards=NUM_SHARDS)
             assert rows["a2a"] == rows["broadcast"], \
                 f"{bench}/{qname}: a2a != broadcast ({len(rows['a2a'])} vs " \
                 f"{len(rows['broadcast'])} rows)"
             # measured fan-out -> measured routed bytes (route_shards == mesh)
             stats: list = []
-            execute_local(local_store, pats, "mapsin", cfg, stats=stats)
+            execute_local(local_store, pats, "mapsin", caps=caps,
+                          stats=stats, route_shards=NUM_SHARDS)
             routed = query_traffic_actual(stats, "mapsin_routed", NUM_SHARDS,
                                           local_store.n_triples)
-            steps = plan_steps(pats, cfg, store)
             emit(f"bench_distributed/{bench}_{qname},"
                  f"{res['a2a'] * 1e6:.0f},"
                  f"a2a_us={res['a2a'] * 1e6:.0f};"
@@ -126,8 +127,9 @@ def _mesh_main(emit=print, lubm_queries=LUBM_QUERIES,
                  f"probe_bytes_routed={routed['probe_bytes_routed']};"
                  f"probe_bytes_broadcast={routed['probe_bytes_broadcast']};"
                  f"net_routed={routed['network']};"
-                 f"payload_a2a={payload_bytes(steps, 'a2a')};"
-                 f"payload_broadcast={payload_bytes(steps, 'broadcast')};"
+                 f"payload_a2a={payload_bytes(plans['a2a'], 'a2a')};"
+                 f"payload_broadcast="
+                 f"{payload_bytes(plans['broadcast'], 'broadcast')};"
                  f"rows={len(rows['a2a'])};"
                  f"identical=1;ovf={res['a2a_ovf']}")
 

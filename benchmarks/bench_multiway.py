@@ -4,13 +4,12 @@ The paper reports 1.4x-3.3x from the single-row-GET optimization; here we
 report wall time AND the round/traffic savings (n-1 collective rounds)."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
-from repro.core import ExecConfig, build_store, execute_local, query_traffic
+from repro.core import Caps, build_store, compile_plan, execute_local, query_traffic
 from repro.data import lubm_like, sp2b_like
 
-CFG = ExecConfig(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=16, row_cap=64)
+CAPS = Caps(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=16, row_cap=64)
 
 
 def _time(fn, repeats=3):
@@ -24,7 +23,7 @@ def _time(fn, repeats=3):
     return min(ts)
 
 
-def main(emit=print, lubm_scale=2, sp2b_scale=4000, cfg=CFG):
+def main(emit=print, lubm_scale=2, sp2b_scale=4000, caps=CAPS):
     cases = []
     tr, _, qs = lubm_like(lubm_scale)
     cases.append(("lubm_Q4", tr, qs["Q4"]))
@@ -33,14 +32,12 @@ def main(emit=print, lubm_scale=2, sp2b_scale=4000, cfg=CFG):
     cases.append(("sp2b_Q2", tr2, qs2["Q2"]))
     for name, tr, pats in cases:
         store = build_store(tr, 1)
-        t_mw = _time(lambda: execute_local(store, pats, "mapsin",
-                                           dataclasses.replace(cfg, multiway=True)))
-        t_2w = _time(lambda: execute_local(store, pats, "mapsin",
-                                           dataclasses.replace(cfg, multiway=False)))
-        b_mw = query_traffic(pats, "mapsin_routed",
-                             dataclasses.replace(cfg, multiway=True), 10)
-        b_2w = query_traffic(pats, "mapsin_routed",
-                             dataclasses.replace(cfg, multiway=False), 10)
+        plan_mw = compile_plan(store, pats, caps, multiway=True)
+        plan_2w = compile_plan(store, pats, caps, multiway=False)
+        t_mw = _time(lambda: execute_local(store, plan_mw))
+        t_2w = _time(lambda: execute_local(store, plan_2w))
+        b_mw = query_traffic(plan_mw, "mapsin_routed", caps, 10)
+        b_2w = query_traffic(plan_2w, "mapsin_routed", caps, 10)
         emit(f"bench_multiway/{name},{t_mw*1e6:.0f},"
              f"multiway_us={t_mw*1e6:.0f};cascade_us={t_2w*1e6:.0f};"
              f"speedup={t_2w/max(t_mw,1e-9):.2f};"

@@ -13,11 +13,11 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ExecConfig, build_store, execute_local, query_traffic
+from repro.core import Caps, build_store, execute_local
 from repro.core.bgp import query_traffic_actual
 from repro.data import lubm_like, sp2b_like
 
-CFG = ExecConfig(scan_cap=1 << 16, out_cap=1 << 13, probe_cap=128, row_cap=64)
+CAPS = Caps(scan_cap=1 << 16, out_cap=1 << 13, probe_cap=128, row_cap=64)
 
 LUBM_QUERIES = ["Q1", "Q3", "Q4", "Q5", "Q6", "Q7", "Q8", "Q11", "Q13", "Q14"]
 SP2B_QUERIES = ["Q1", "Q2", "Q3a", "Q10"]
@@ -50,11 +50,12 @@ def run(scales=(1, 2, 4), emit=print, lubm_queries=LUBM_QUERIES,
                 pats = qs[qname]
                 res = {}
                 for mode in ("mapsin", "reduce"):
-                    t = _time(lambda m=mode: execute_local(store, pats, m, CFG),
+                    t = _time(lambda m=mode: execute_local(store, pats, m,
+                                                           caps=CAPS),
                               repeats=repeats)
                     res[mode] = t
                 stats: list = []
-                execute_local(store, pats, "mapsin", CFG, stats=stats)
+                execute_local(store, pats, "mapsin", caps=CAPS, stats=stats)
                 mr = query_traffic_actual(stats, "mapsin_routed", 10, store.n_triples)
                 rd = query_traffic_actual(stats, "reduce", 10, store.n_triples)
                 speed = res["reduce"] / max(res["mapsin"], 1e-9)

@@ -50,13 +50,13 @@ import numpy as np
 
 import jax
 
-from repro.core import (ExecConfig, build_store, execute_local,
+from repro.core import (Caps, ExecConfig, build_store, execute_local,
                         execute_oracle, rows_set)
 from repro.core.bgp import order_patterns
 from repro.data import lubm_like, sp2b_like
 from repro.serve import EngineBusy, ServeEngine
 
-CFG = ExecConfig(out_cap=128, probe_cap=32, row_cap=16)
+CAPS = Caps(out_cap=128, probe_cap=32, row_cap=16)
 
 N_DEPT, N_PROF, N_COURSE = 12, 18, 24     # rdf_gen.lubm_like constants
 
@@ -134,7 +134,7 @@ def _run_sequential(stores, reqs, arrivals):
     for (tenant, _, pats), arr in zip(reqs, arrivals):
         start = max(now, arr)
         t0 = time.perf_counter()
-        _block(execute_local(stores[tenant], pats, "mapsin", CFG))
+        _block(execute_local(stores[tenant], pats, "mapsin", caps=CAPS))
         now = start + (time.perf_counter() - t0)
         lat.append(now - arr)
     return lat, now
@@ -180,17 +180,22 @@ SHARDED_SHARDS = 8
 SHARDED_SHAPES = ("lubm_q1", "lubm_q3", "lubm_q5", "lubm_q13", "lubm_q4star")
 
 
-def _seq_payload_bytes(store, pats, cfg, num_shards):
+def _seq_payload_bytes(store, pats, cfg, caps, num_shards):
     """Static per-shard a2a collective payload of ONE execute_sharded call
-    (tuned bucket; same convention as ServeEngine._payload_bytes and
-    bench_distributed: the local diagonal block is excluded)."""
-    from repro.core.bgp import plan_steps, tune_a2a_bucket_cap
-    tuned = tune_a2a_bucket_cap(store, pats, cfg, num_shards)
-    s, total = num_shards, 0
-    for st in plan_steps(pats, cfg, store)[1:]:
-        cap = cfg.row_cap if st.kind == "multiway" else cfg.probe_cap
-        total += (s - 1) * tuned * (8 + 8)
-        total += (s - 1) * tuned * (cap * 8 + 4 + 4)
+    (embedded measured caps; same convention as ServeEngine._payload_bytes
+    and bench_distributed: the local diagonal block is excluded)."""
+    from repro.core import compile_plan
+    from repro.core.bgp import a2a_step_payload_bytes
+    plan = compile_plan(store, pats, caps, routing=cfg.routing,
+                        num_shards=num_shards)
+    total = 0
+    for st in plan.steps[1:]:
+        if st.kind not in ("mapsin", "multiway"):
+            continue
+        cap = (st.caps.row_cap if st.kind == "multiway"
+               else st.caps.probe_cap)
+        total += a2a_step_payload_bytes(st.caps.a2a_bucket_cap, cap,
+                                        num_shards)
     return total
 
 
@@ -200,13 +205,11 @@ def _sharded_mesh_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
     """Body that runs INSIDE the forced-multi-device process: batched
     sharded engine vs the per-query execute_sharded loop, warm on both
     sides, every batched result verified row-identical to execute_local."""
-    import dataclasses
-
     from jax.sharding import Mesh
 
     assert jax.device_count() >= num_shards, jax.devices()
     mesh = Mesh(np.array(jax.devices()[:num_shards]), ("data",))
-    cfg = dataclasses.replace(CFG, routing="a2a", a2a_bucket_cap=0)
+    cfg = ExecConfig(routing="a2a")
     tr, d, _ = lubm_like(lubm_scale)
     store = build_store(tr, num_shards=num_shards)
     rng = np.random.RandomState(seed)
@@ -219,13 +222,15 @@ def _sharded_mesh_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
     reqs = [pools[names[rng.randint(len(names))]][rng.randint(n_variants)]
             for _ in range(n_requests)]
 
-    engine = ServeEngine(store, d, cfg, mesh=mesh, max_batch=max_batch,
-                         max_queue=4 * n_requests, compile_cache_size=64)
+    engine = ServeEngine(store, d, cfg, caps=CAPS, mesh=mesh,
+                         max_batch=max_batch, max_queue=4 * n_requests,
+                         compile_cache_size=64)
 
     def run_seq():
         for pats in reqs:
             from repro.core import execute_sharded
-            t, v, ovf, _ = execute_sharded(store, pats, mesh, "mapsin", cfg)
+            t, v, ovf, _ = execute_sharded(store, pats, mesh, "mapsin", cfg,
+                                           caps=CAPS)
             jax.block_until_ready((t, v, ovf))
 
     # --- warm-up + verification (compiles and tuning paid here) ----------
@@ -235,7 +240,7 @@ def _sharded_mesh_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
     for pats, res in zip(reqs, results):
         key = tuple(pats)
         if key not in local_cache:
-            bnd = execute_local(store, pats, "mapsin", cfg)
+            bnd = execute_local(store, pats, "mapsin", cfg, caps=CAPS)
             local_cache[key] = (rows_set(bnd.table, bnd.valid, len(bnd.vars)),
                                 tuple(bnd.vars))
         want, vars_ = local_cache[key]
@@ -256,7 +261,7 @@ def _sharded_mesh_main(emit=print, num_shards=SHARDED_SHARDS, lubm_scale=2,
     run_seq()
     sat_s = time.perf_counter() - t0
     qps_b, qps_s = n_requests / sat_b, n_requests / sat_s
-    bytes_q_seq = float(np.mean([_seq_payload_bytes(store, pats, cfg,
+    bytes_q_seq = float(np.mean([_seq_payload_bytes(store, pats, cfg, CAPS,
                                                     num_shards)
                                  for pats in reqs]))
 
@@ -320,7 +325,8 @@ def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
     def fresh_engines():
         # compile cache must hold every (template, pow2-batch) pair or the
         # timed phases would re-pay compiles on eviction
-        return {t: ServeEngine(stores[t], dicts[t], CFG, max_batch=max_batch,
+        return {t: ServeEngine(stores[t], dicts[t], caps=CAPS,
+                               max_batch=max_batch,
                                max_queue=4 * n_requests,
                                compile_cache_size=64)
                 for t in stores}
@@ -369,7 +375,7 @@ def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
     for (tenant, rid), (t, name, pats) in rid_to_req.items():
         key = (tenant, tuple(pats))
         if key not in local_cache:
-            bnd = execute_local(stores[tenant], pats, "mapsin", CFG)
+            bnd = execute_local(stores[tenant], pats, "mapsin", caps=CAPS)
             local_cache[key] = (rows_set(bnd.table, bnd.valid, len(bnd.vars)),
                                 tuple(bnd.vars))
         want, vars_ = local_cache[key]
@@ -385,7 +391,8 @@ def main(emit=print, lubm_scale=2, sp2b_scale=1000, n_requests=192,
         for t, shp in vshapes.items():
             tr_v, d_v, _ = vs[t]
             store_v = build_store(tr_v, 1)
-            eng_v = ServeEngine(store_v, d_v, CFG, max_batch=max_batch)
+            eng_v = ServeEngine(store_v, d_v, caps=CAPS,
+                                max_batch=max_batch)
             for name, _, fn in shp:
                 pats = fn()
                 res = eng_v.execute([pats])[0]

@@ -7,7 +7,8 @@ perf trajectory with a plain ``git diff`` / ``jq``:
   bench_loading      — paper Table 4  (bulk load times)
   bench_queries      — paper Table 5 / Figs 4,5,7 (MAPSIN vs reduce-side)
   bench_multiway     — paper Fig 6 / §4.3 (star-join single-GET optimization)
-  bench_selectivity  — paper §5 analysis (win grows with selectivity)
+  bench_selectivity  — paper §5 analysis (win grows with selectivity) +
+                       the planner's cost-based vs heuristic ordering gate
   bench_kernels      — kernel hot-spot microbenches
   bench_serving      — serving layer (DESIGN.md §5): batched engine
                        throughput/latency vs the sequential loop

@@ -26,7 +26,7 @@ def main() -> int:
     from benchmarks import (bench_kernels, bench_loading, bench_multiway,
                             bench_queries, bench_selectivity, bench_serving)
     import dataclasses
-    small_mw = dataclasses.replace(bench_multiway.CFG, out_cap=1 << 12,
+    small_mw = dataclasses.replace(bench_multiway.CAPS, out_cap=1 << 12,
                                    scan_cap=1 << 12, row_cap=16)
     suites = [
         ("loading", lambda emit: bench_loading.main(
@@ -35,9 +35,11 @@ def main() -> int:
             scales=(1,), emit=emit, lubm_queries=("Q1", "Q4"),
             sp2b_queries=("Q10",), repeats=1)),
         ("multiway", lambda emit: bench_multiway.main(
-            emit=emit, lubm_scale=1, sp2b_scale=500, cfg=small_mw)),
+            emit=emit, lubm_scale=1, sp2b_scale=500, caps=small_mw)),
+        # selectivity also smokes the planner's cost-vs-heuristic ordering
+        # gate (order_* rows assert row-identity + probe_ratio >= 1)
         ("selectivity", lambda emit: bench_selectivity.main(
-            emit=emit, n=20_000)),
+            emit=emit, n=20_000, lubm_scale=1, repeats=1)),
         ("kernels", lambda emit: bench_kernels.main(
             emit=emit, sizes=((1 << 12, 1 << 8),))),
         ("serving", lambda emit: bench_serving.main(

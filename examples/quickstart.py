@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import (Dictionary, ExecConfig, build_store, execute_local,
+from repro.core import (Caps, Dictionary, build_store, execute_local,
                         query_traffic, rows_set)
 
 # --- the paper's running example (Section 2.1 RDF graph) -------------------
@@ -28,8 +28,8 @@ query = [
     d.pattern("?article", "author", "?author"),
     d.pattern("?article", "year", "?year"),
 ]
-cfg = ExecConfig(out_cap=1024, probe_cap=8, row_cap=16)
-result = execute_local(store, query, mode="mapsin", cfg=cfg)
+caps = Caps(out_cap=1024, probe_cap=8, row_cap=16)
+result = execute_local(store, query, mode="mapsin", caps=caps)
 rows = rows_set(result.table, result.valid, len(result.vars))
 print("vars:", result.vars)
 for row in sorted(rows):
@@ -38,4 +38,4 @@ for row in sorted(rows):
 # --- the paper's network argument, in bytes (10-shard cluster model) --------
 for mode in ("mapsin_routed", "mapsin", "reduce"):
     print(f"{mode:15s} modeled interconnect bytes: "
-          f"{query_traffic(query, mode, cfg, num_shards=10):,}")
+          f"{query_traffic(query, mode, caps, num_shards=10, store=store):,}")

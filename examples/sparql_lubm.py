@@ -6,11 +6,15 @@ both engines, verify against the oracle, print the comparison table.
     PYTHONPATH=src python examples/sparql_lubm.py [n_universities]
     PYTHONPATH=src python examples/sparql_lubm.py 1 --sparql \\
         'SELECT ?x WHERE { ?x a <Professor> . ?x <worksFor> <Dept0.U0> . }'
+    PYTHONPATH=src python examples/sparql_lubm.py 1 --explain [--sparql Q]
 
 With --sparql the given query (text or a path to a .rq/.sparql file) is
 parsed, executed, and its rows printed with dictionary-decoded terms.
-Without it, every built-in query runs from its text form in
-data/rdf_gen.py:LUBM_SPARQL — the front-end is on the path, not beside
+With --explain NOTHING executes: the compiled ``PhysicalPlan`` (cost-based
+join order, per-step operator, caps, cost estimates) is printed for the
+ad-hoc --sparql query, or for every built-in query when --sparql is
+absent. Without either flag, every built-in query runs from its text form
+in data/rdf_gen.py:LUBM_SPARQL — the front-end is on the path, not beside
 it (each parse is also asserted equal to the hand-built Pattern list).
 """
 import os
@@ -19,18 +23,21 @@ import time
 
 import jax
 
-from repro.core import (ExecConfig, build_store, execute_local,
-                        execute_oracle, query_traffic, rows_set)
+from repro.core import (Caps, build_store, compile_plan, execute_local,
+                        execute_oracle, explain, query_traffic, rows_set)
 from repro.data import lubm_like
 from repro.data.rdf_gen import LUBM_SPARQL
 from repro.serve import parse_bgp
 
 args = sys.argv[1:]
+explain_only = "--explain" in args
+if explain_only:
+    args.remove("--explain")
 sparql_text = None
 if "--sparql" in args:
     i = args.index("--sparql")
     if i + 1 >= len(args):
-        sys.exit("usage: sparql_lubm.py [n_universities] "
+        sys.exit("usage: sparql_lubm.py [n_universities] [--explain] "
                  "[--sparql QUERY_TEXT_OR_FILE]")
     sparql_text = args[i + 1]
     args = args[:i] + args[i + 2:]
@@ -44,11 +51,24 @@ print(f"LUBM-like x{n_univ}: {len(triples):,} triples, {len(d):,} terms")
 store = build_store(triples, num_shards=1)
 # probe_cap must hold Q8's memberOf fan-out (120 students per department);
 # at 16 the probe truncates (surfaced as overflow) and Q8 reported inexact
-cfg = ExecConfig(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=128, row_cap=64)
+caps = Caps(scan_cap=1 << 16, out_cap=1 << 16, probe_cap=128, row_cap=64)
+
+if explain_only:
+    # print the physical plan(s), execute nothing
+    if sparql_text is not None:
+        queries = {"ad-hoc": list(parse_bgp(sparql_text, d).patterns)}
+    else:
+        queries = {name: list(parse_bgp(text, d).patterns)
+                   for name, text in LUBM_SPARQL.items()}
+    for name, pats in queries.items():
+        plan = compile_plan(store, pats, caps)
+        print(f"\n== {name} ==")
+        print(explain(plan, decode=d.term))
+    sys.exit(0)
 
 if sparql_text is not None:
     pq = parse_bgp(sparql_text, d)           # ValueError on bad input
-    bnd = execute_local(store, list(pq.patterns), "mapsin", cfg)
+    bnd = execute_local(store, list(pq.patterns), "mapsin", caps=caps)
     got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
     sel = [bnd.vars.index(v) for v in pq.select]
     print("  ".join(pq.select))
@@ -64,7 +84,7 @@ for qname, text in LUBM_SPARQL.items():
     assert pats == hand_built[qname], f"{qname}: text form drifted"
     times = {}
     for mode in ("mapsin", "reduce"):
-        fn = lambda m=mode: execute_local(store, pats, m, cfg)
+        fn = lambda m=mode: execute_local(store, pats, m, caps=caps)
         fn()  # compile
         t0 = time.perf_counter()
         bnd = fn()
@@ -75,8 +95,9 @@ for qname, text in LUBM_SPARQL.items():
     if tuple(bnd.vars) != ovars:
         perm = [bnd.vars.index(v) for v in ovars]
         got = set(tuple(r[i] for i in perm) for r in got)
-    net = (query_traffic(pats, "reduce", cfg, 10)
-           / max(query_traffic(pats, "mapsin_routed", cfg, 10), 1))
+    net = (query_traffic(pats, "reduce", caps, 10, store=store)
+           / max(query_traffic(pats, "mapsin_routed", caps, 10,
+                               store=store), 1))
     print(f"{qname:6s} {len(got):6d} {times['mapsin']*1e3:8.1f}m "
           f"{times['reduce']*1e3:8.1f}m {times['reduce']/times['mapsin']:8.2f} "
           f"{net:9.1f}  {got == want}")

@@ -1,9 +1,13 @@
-"""MAPSIN join engine — the paper's core contribution (DESIGN.md §1-2)."""
+"""MAPSIN join engine — the paper's core contribution (DESIGN.md §1-2, §6)."""
 from repro.core.bgp import (  # noqa: F401
     ExecConfig, execute_local, execute_sharded, plan_steps, query_traffic,
     rows_set,
 )
 from repro.core.mapsin import Bindings, mapsin_step, multiway_step, scan_pattern  # noqa: F401
 from repro.core.oracle import execute_oracle  # noqa: F401
+from repro.core.planner import (  # noqa: F401
+    Caps, LogicalPlan, PhysicalPlan, PlanStep, compile_plan, explain,
+    quantize_cap,
+)
 from repro.core.rdf import Dictionary, Pattern, pack3, unpack3  # noqa: F401
 from repro.core.triple_store import TripleStore, build_store  # noqa: F401

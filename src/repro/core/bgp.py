@@ -1,20 +1,28 @@
-"""BGP planner + executor: variable-counting reorder, star-join grouping,
-MAPSIN vs reduce-side execution, local or sharded, with traffic accounting.
+"""BGP executors over the planner's ``PhysicalPlan`` IR (DESIGN.md §1/§6).
+
+Planning lives in ``core/planner.py``: ``compile_plan`` turns a pattern
+list into a ``PhysicalPlan`` whose steps each carry their own operator
+(``scan | mapsin | multiway | reduce_side``) and static capacities
+(``Caps``). Every executor here CONSUMES a plan; passing a raw
+``Sequence[Pattern]`` still works — the entry points are thin
+plan-then-execute wrappers. ``ExecConfig`` is runtime-only: kernel
+``impl``, collective ``routing``, and the ``reorder`` escape hatch.
 
 Execution model (the fused probe engine, this module's layer of it):
-the whole cascade — the first-pattern scan plus every `mapsin_step` /
-`multiway_step` / reduce-side iteration — is compiled as ONE jitted
-function per (plan, mode, config) and cached, so `execute_local` pays a
-single dispatch per query instead of ~6 eager ops per step, and the
-initial Bindings buffers are donated to the computation (active on
-accelerator backends).  Host syncs (`int(count())` per step) happen only
-on the opt-in `stats=` instrumentation path, which also measures the
-probe->region fan-out that feeds `query_traffic_actual`'s routed model.
+the whole cascade — the first-pattern scan plus every step — is compiled
+as ONE jitted function per (plan, cfg) and cached, so ``execute_local``
+pays a single dispatch per query instead of ~6 eager ops per step, and
+the initial Bindings buffers are donated to the computation (active on
+accelerator backends). Host syncs (``int(count())`` per step) happen
+only on the opt-in ``stats=`` instrumentation path, which records the
+ACTUAL row counts, the per-step overflow counters (probe/out-cap drops
+— surfaced, never silent), and the measured probe->region fan-out that
+feeds ``query_traffic_actual``'s routed model and the planner's a2a
+capacity embedding.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Sequence
 
 import jax
@@ -27,132 +35,58 @@ from repro.core import distributed as dist
 from repro.core import mapsin as ms
 from repro.core import reduce_side as rs
 from repro.core.plan import make_plan
+from repro.core.planner import (  # noqa: F401  (re-exported API surface)
+    ALL_OPERATORS, Caps, LogicalPlan, PhysicalPlan, PlanStep, _host_keys,
+    compile_plan, explain, order_patterns, pattern_cardinality, quantize_cap)
 from repro.core.rdf import Pattern
 from repro.core.triple_store import TripleStore
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
-    scan_cap: int = 1 << 14      # first-pattern scan capacity (per shard)
-    probe_cap: int = 8           # matches per GET (per mapping)
-    row_cap: int = 32            # row width for multiway single-GET
-    out_cap: int = 1 << 14       # solution multiset capacity (per shard)
-    bucket_cap: int = 1 << 12    # reduce-side shuffle bucket capacity
+    """Runtime-only knobs. Capacities and planning options moved to the
+    planner (``Caps`` / ``compile_plan`` arguments) — a capacity is a
+    compile-time shape constant carried by the plan, not a runtime flag."""
     impl: str = "jnp"            # jnp | pallas | pallas_interpret
-    reorder: bool = True
-    multiway: bool = True
-    route_shards: int = 10       # hypothetical cluster for routed traffic
-                                 # measurement (paper's 10-node setup)
     routing: str = "broadcast"   # dist_probe collective: broadcast | a2a
                                  # (a2a = point-to-point region routing)
-    a2a_bucket_cap: int = 0      # per-destination probe bucket capacity for
-                                 # routing="a2a"; 0 = auto-tune from the
-                                 # measured probe->region fan-out
-                                 # (tune_a2a_bucket_cap; static 2x-uniform
-                                 # share for direct dist_probe callers),
-                                 # out_cap = drop-free guarantee
+    reorder: bool = True         # False = execute patterns as given
 
 
 @dataclasses.dataclass(frozen=True)
 class Step:
-    kind: str                    # scan | join | multiway
+    """DEPRECATED legacy step (kind: scan | join | multiway). New code
+    consumes ``planner.PlanStep`` (which adds per-step caps + estimates);
+    this shape survives only for ``plan_steps`` callers."""
+    kind: str
     patterns: tuple[Pattern, ...]
 
 
-def pattern_cardinality(store: TripleStore, pat: Pattern) -> int:
-    """Exact result count for a pattern's constant key prefix — one binary
-    search pair against the store index. This is the statistics-based
-    selectivity the paper's §7 lists as future work; the sorted composite-key
-    store makes it free. Memoized per store (planning stays off the timed
-    path when the same query re-executes)."""
-    ck = ("card", pat)
-    if ck in store.plan_cache:
-        return store.plan_cache[ck]
-    plan = make_plan(pat, ())
-    if not plan.prefix:
-        n = store.n_triples
-    else:
-        from repro.core.plan import probe_ranges
-        empty = jnp.zeros((1, 0), jnp.int32)
-        lo, hi = probe_ranges(plan, empty)
-        keys = _host_keys(store, plan.index)
-        n = int(np.searchsorted(keys, np.asarray(hi)[0])
-                - np.searchsorted(keys, np.asarray(lo)[0]))
-    store.plan_cache[ck] = n
-    return n
+def plan_steps(patterns: Sequence[Pattern], caps: Caps | None = None,
+               store: TripleStore | None = None, multiway: bool = True,
+               reorder: bool = True) -> list[Step]:
+    """DEPRECATED: heuristic-ordered legacy steps. Use ``compile_plan``
+    (cost-based, per-step operators + caps) and read ``plan.steps``."""
+    from repro.core.planner import ENGINE_OPERATORS
+    plan = compile_plan(store, patterns, caps or Caps(),
+                        ordering="heuristic", multiway=multiway,
+                        reorder=reorder, operators=ENGINE_OPERATORS)
+    kind_of = {"mapsin": "join", "reduce_side": "join"}
+    return [Step(kind_of.get(st.kind, st.kind), st.patterns)
+            for st in plan.steps]
 
 
-def order_patterns(patterns: Sequence[Pattern], reorder: bool = True,
-                   store: TripleStore | None = None):
-    """Variable-counting heuristic (paper §4.2): most selective first, then
-    greedily prefer patterns connected to the bound domain. With a store,
-    ties break on measured prefix-range cardinality (beyond-paper)."""
-    pats = list(patterns)
-    if not reorder:
-        return pats
-
-    def rank(p: Pattern):
-        base = p.selectivity_rank()
-        if store is not None:
-            return base + (pattern_cardinality(store, p),)
-        return base
-
-    pats_sorted = sorted(pats, key=rank)
-    out = [pats_sorted.pop(0)]
-    domain = set(out[0].variables)
-    while pats_sorted:
-        connected = [p for p in pats_sorted if set(p.variables) & domain]
-        nxt = min(connected or pats_sorted, key=rank)
-        pats_sorted.remove(nxt)
-        out.append(nxt)
-        domain |= set(nxt.variables)
-    return out
-
-
-def plan_steps(patterns: Sequence[Pattern], cfg: ExecConfig,
-               store: TripleStore | None = None) -> list[Step]:
-    if store is not None:
-        sk = ("steps", tuple(patterns), cfg)
-        if sk not in store.plan_cache:
-            store.plan_cache[sk] = _plan_steps_uncached(patterns, cfg, store)
-        return list(store.plan_cache[sk])
-    return _plan_steps_uncached(patterns, cfg, store)
-
-
-def _plan_steps_uncached(patterns: Sequence[Pattern], cfg: ExecConfig,
-                         store: TripleStore | None = None) -> list[Step]:
-    ordered = order_patterns(patterns, cfg.reorder, store)
-    steps: list[Step] = [Step("scan", (ordered[0],))]
-    domain: list[str] = list(ordered[0].variables)
-    i = 1
-    while i < len(ordered):
-        group = [ordered[i]]
-        if cfg.multiway:
-            plan_i = make_plan(ordered[i], domain)
-            new_vars = set(plan_i.out_var_names)
-            j = i + 1
-            while j < len(ordered) and len(plan_i.prefix) >= 1:
-                cand = make_plan(ordered[j], domain)
-                same_row = (cand.index == plan_i.index and
-                            len(cand.prefix) >= 1 and
-                            cand.prefix[0] == plan_i.prefix[0])
-                fresh = not (set(cand.out_var_names) & new_vars)
-                uses_new = bool(set(ordered[j].variables) & new_vars)
-                if not (same_row and fresh and not uses_new):
-                    break
-                group.append(ordered[j])
-                new_vars |= set(cand.out_var_names)
-                j += 1
-        if len(group) > 1:
-            steps.append(Step("multiway", tuple(group)))
-        else:
-            steps.append(Step("join", (group[0],)))
-        for g in group:
-            for v in g.variables:
-                if v not in domain:
-                    domain.append(v)
-        i += len(group)
-    return steps
+def as_plan(store: TripleStore | None, query, mode: str = "mapsin",
+            cfg: ExecConfig = ExecConfig(), caps: Caps = Caps(),
+            num_shards: int = 0, route_shards: int = 10) -> PhysicalPlan:
+    """Resolve a query argument (PhysicalPlan | LogicalPlan | patterns)
+    into a PhysicalPlan — the plan-then-execute shim behind every legacy
+    entry point."""
+    if isinstance(query, PhysicalPlan):
+        return query
+    return compile_plan(store, query, caps, mode=mode,
+                        reorder=cfg.reorder, routing=cfg.routing,
+                        num_shards=num_shards, route_shards=route_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -160,9 +94,10 @@ def _plan_steps_uncached(patterns: Sequence[Pattern], cfg: ExecConfig,
 # ---------------------------------------------------------------------------
 
 
-def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
+def step_traffic_bytes(step: PlanStep, mode: str, num_shards: int,
                        n_vars_before: int) -> int:
-    """Global bytes crossing the interconnect for one step (padding included).
+    """Global bytes crossing the interconnect for one step (padding
+    included), from the step's OWN caps.
 
     Modes:
       mapsin         — the implemented broadcast-GET: probe keys are
@@ -179,10 +114,14 @@ def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
                        _dist_probe_a2a).
       reduce         — shuffle BOTH relations (repartition join).
     """
-    s, b = num_shards, cfg.out_cap
+    s, b = num_shards, step.caps.out_cap
     if s == 1 or step.kind == "scan":
         return 0
-    cap = cfg.row_cap if step.kind == "multiway" else cfg.probe_cap
+    cap = (step.caps.row_cap if step.kind == "multiway"
+           else step.caps.probe_cap)
+    if step.kind == "reduce_side":
+        mode = "reduce"     # a hybrid plan's reduce step shuffles whatever
+                            # the comparison mode prices the OTHER steps at
     if mode == "mapsin":
         keys = s * b * (8 + 8 + 24) * (s - 1)          # all_gather lo/hi/filters
         counts = s * (s * b) * 4 * (s - 1)             # all_gather counts
@@ -194,9 +133,39 @@ def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
         return keys + matches
     # reduce-side: shuffle Omega and the scanned relation in full
     nv_left = n_vars_before
-    per_rel = s * s * cfg.bucket_cap * 4               # rows x int32 cols
+    per_rel = s * s * step.caps.bucket_cap * 4         # rows x int32 cols
     rounds = len(step.patterns)
     return rounds * (per_rel * (nv_left + 3) + per_rel)  # + validity bytes
+
+
+def a2a_step_payload_bytes(bucket_cap: int, answer_cap: int,
+                           num_shards: int) -> int:
+    """Static per-shard a2a collective payload of ONE dist_probe round
+    (DESIGN.md §2 wire format): per non-local destination, the probe
+    bucket's (lo, hi) records out plus the answer return leg (answer_cap
+    key slots + count + missed per bucket slot). The local diagonal block
+    never crosses the network and is excluded. The ONE shared formula —
+    the serving engine's traffic accounting and both benches call this,
+    so a wire-format change (like PR 4's 44->20 B record) lands once."""
+    s = num_shards
+    return ((s - 1) * bucket_cap * (8 + 8)
+            + (s - 1) * bucket_cap * (answer_cap * 8 + 4 + 4))
+
+
+def query_traffic(query, mode: str, caps: Caps = Caps(),
+                  num_shards: int = 1,
+                  store: TripleStore | None = None) -> int:
+    """Total modeled interconnect bytes for a query (paper's network
+    metric). `query` may be a compiled PhysicalPlan or a pattern list
+    (planned heuristically when no store supplies statistics)."""
+    plan = as_plan(store, query, caps=caps)
+    total = 0
+    seen: set[str] = set()
+    for st in plan.steps:
+        total += step_traffic_bytes(st, mode, num_shards, len(seen))
+        for p in st.patterns:
+            seen.update(p.variables)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -204,78 +173,100 @@ def step_traffic_bytes(step: Step, mode: str, cfg: ExecConfig, num_shards: int,
 # ---------------------------------------------------------------------------
 
 
-def _cascade_body(steps: tuple, mode: str, cfg: ExecConfig):
+def _cascade_body(plan: PhysicalPlan, cfg: ExecConfig):
     """The whole-cascade computation: (keys_spo, keys_ops, scratch) -> Bindings.
 
-    One traced function per (plan, mode, cfg): every scan/join/multiway
-    iteration fuses into a single XLA computation, so repeated execution
-    pays one dispatch and zero per-step host syncs. `scratch` is the
-    zeroed initial Bindings, donated on backends that support donation.
+    One traced function per (plan, cfg): every step fuses into a single
+    XLA computation, so repeated execution pays one dispatch and zero
+    per-step host syncs. `scratch` is the zeroed initial Bindings,
+    donated on backends that support donation. Each step runs the
+    operator the PLANNER chose for it, at the caps the plan embeds.
     """
+    steps = plan.steps
     first = steps[0].patterns[0]
     first_vars = make_plan(first, ()).out_var_names
 
     def fn(keys_spo, keys_ops, scratch):
         keys_of = lambda pat, dom: (keys_spo if make_plan(pat, dom).index == 0
                                     else keys_ops)
-        bnd = ms.scan_pattern(first, keys_of(first, ()), cfg.out_cap,
-                              cfg.impl, scratch=scratch)
+        bnd = ms.scan_pattern(first, keys_of(first, ()),
+                              steps[0].caps.out_cap, cfg.impl,
+                              scratch=scratch)
         for st in steps[1:]:
-            if mode == "mapsin":
+            c = st.caps
+            if st.kind == "multiway":
                 keys = keys_of(st.patterns[0], bnd.vars)
-                if st.kind == "multiway":
-                    bnd = ms.multiway_step(bnd, st.patterns, keys, cfg.row_cap,
-                                           cfg.out_cap, cfg.impl)
-                else:
-                    bnd = ms.mapsin_step(bnd, st.patterns[0], keys,
-                                         cfg.probe_cap, cfg.out_cap, cfg.impl)
-            else:
-                for pat in st.patterns:  # reduce-side: relation scanned fresh
+                bnd = ms.multiway_step(bnd, st.patterns, keys, c.row_cap,
+                                       c.out_cap, cfg.impl)
+            elif st.kind == "mapsin":
+                keys = keys_of(st.patterns[0], bnd.vars)
+                bnd = ms.mapsin_step(bnd, st.patterns[0], keys,
+                                     c.probe_cap, c.out_cap, cfg.impl)
+            else:                # reduce_side: relation scanned fresh
+                for pat in st.patterns:
                     bnd = rs.local_reduce_step(bnd, pat, keys_of(pat, ()),
-                                               cfg.scan_cap, cfg.probe_cap,
-                                               cfg.out_cap, cfg.impl)
+                                               c.scan_cap, c.probe_cap,
+                                               c.out_cap, cfg.impl)
         return bnd
 
     return fn, first_vars
 
 
-def _compiled_cascade(store: TripleStore, steps: tuple, mode: str,
+def _compiled_cascade(store: TripleStore, plan: PhysicalPlan,
                       cfg: ExecConfig):
-    key = ("cascade", steps, mode, cfg)
+    key = ("cascade", plan, cfg)
     hit = store.plan_cache.get(key)
     if hit is None:
-        fn, first_vars = _cascade_body(steps, mode, cfg)
+        fn, first_vars = _cascade_body(plan, cfg)
         donate = (2,) if jax.default_backend() in ("tpu", "gpu") else ()
         hit = (jax.jit(fn, donate_argnums=donate), first_vars)
         store.plan_cache[key] = hit
     return hit
 
 
-def execute_local(store: TripleStore, patterns: Sequence[Pattern],
-                  mode: str = "mapsin", cfg: ExecConfig = ExecConfig(),
-                  stats: list | None = None):
+def _check_plan_mode(query, mode: str):
+    """A compiled plan carries its own operators, so the `mode` argument
+    is only meaningful as a reduce-BASELINE request: asking for 'reduce'
+    on a mapsin-compiled plan would silently time the wrong engine. (The
+    default 'mapsin' with a plan means 'execute the plan as compiled' —
+    hybrid plans legitimately contain reduce_side fallback steps.)"""
+    if not isinstance(query, PhysicalPlan):
+        return
+    if mode == "reduce" and any(st.kind in ("mapsin", "multiway")
+                                for st in query.steps):
+        raise ValueError("mode='reduce' with a compiled mapsin plan — "
+                         "operators are baked into the plan; use "
+                         "compile_plan(..., mode='reduce') for the baseline")
+
+
+def execute_local(store: TripleStore, query, mode: str = "mapsin",
+                  cfg: ExecConfig = ExecConfig(), caps: Caps = Caps(),
+                  stats: list | None = None,
+                  route_shards: int | None = None):
     """Single-shard execution (functional reference; also the oracle's peer).
 
-    The default path runs the cached whole-cascade jit — no per-step
-    dispatch, no host syncs in the timed region. When `stats` is a list
-    (opt-in instrumentation, off the hot path), the cascade runs stepwise
-    and appends per-step dicts with ACTUAL row counts plus the measured
-    probe->region fan-out — feeds the measured traffic model in
-    query_traffic_actual (the paper's network metric)."""
-    steps = tuple(plan_steps(patterns, cfg, store))
+    `query` is a compiled ``PhysicalPlan`` or a raw pattern sequence
+    (compiled cost-based on the spot — cached on the store). The default
+    path runs the cached whole-cascade jit — no per-step dispatch, no
+    host syncs in the timed region. When `stats` is a list (opt-in
+    instrumentation, off the hot path), the cascade runs stepwise and
+    appends per-step dicts with ACTUAL row counts, the per-step overflow
+    counter, and the measured probe->region fan-out — feeding the
+    measured traffic model in query_traffic_actual (the paper's network
+    metric) and the planner's a2a capacity embedding. An explicit
+    `route_shards` overrides the plan's baked-in measurement size; the
+    default (None) keeps the plan's (10 when compiling patterns)."""
+    _check_plan_mode(query, mode)
+    plan = as_plan(store, query, mode, cfg, caps,
+                   route_shards=10 if route_shards is None else route_shards)
+    if (route_shards is not None and isinstance(query, PhysicalPlan)
+            and plan.route_shards != route_shards):
+        plan = dataclasses.replace(plan, route_shards=route_shards)
     if stats is not None:
-        return _execute_local_instrumented(store, steps, mode, cfg, stats)
-    jitted, first_vars = _compiled_cascade(store, steps, mode, cfg)
-    scratch = ms.Bindings.empty(first_vars, cfg.out_cap)
+        return _execute_local_instrumented(store, plan, cfg, stats)
+    jitted, first_vars = _compiled_cascade(store, plan, cfg)
+    scratch = ms.Bindings.empty(first_vars, plan.steps[0].caps.out_cap)
     return jitted(store.flat_keys(0), store.flat_keys(1), scratch)
-
-
-def _host_keys(store: TripleStore, index: int) -> np.ndarray:
-    """Host-side copy of one flattened index (one device->host transfer)."""
-    ck = ("np_keys", index)
-    if ck not in store.plan_cache:
-        store.plan_cache[ck] = np.asarray(store.flat_keys(index))
-    return store.plan_cache[ck]
 
 
 def _route_splits(store: TripleStore, index: int, s: int) -> np.ndarray:
@@ -301,7 +292,7 @@ def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
     broadcast's n_in * S. Returns (total deliveries, max per-region load,
     max range-entry count per probe); the per-region max sizes the a2a
     per-destination probe buckets and the per-probe max sizes the answer
-    return leg (tune_a2a_bucket_cap)."""
+    return leg (planner.embed_a2a_caps)."""
     from repro.core.plan import probe_ranges, row_range
     lo, hi = (row_range if whole_row else probe_ranges)(plan, bnd.table)
     lo, hi = np.asarray(lo), np.asarray(hi)
@@ -318,123 +309,55 @@ def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
             int(lens.max(initial=0)))
 
 
-def _execute_local_instrumented(store: TripleStore, steps: tuple, mode: str,
+def _execute_local_instrumented(store: TripleStore, plan: PhysicalPlan,
                                 cfg: ExecConfig, stats: list):
+    steps = plan.steps
     keys_of = lambda pat, dom: store.flat_keys(make_plan(pat, dom).index)
-    s_route = cfg.route_shards
+    s_route = plan.route_shards
     bnd = ms.scan_pattern(steps[0].patterns[0],
-                          keys_of(steps[0].patterns[0], ()), cfg.out_cap,
-                          cfg.impl)
+                          keys_of(steps[0].patterns[0], ()),
+                          steps[0].caps.out_cap, cfg.impl)
+    ovf_prev = int(np.asarray(bnd.overflow))
     stats.append({"kind": "scan", "n_in": 0, "n_out": int(bnd.count()),
                   "nv": len(bnd.vars), "relation": int(bnd.count()),
-                  "n_patterns": 1})
+                  "n_patterns": 1, "overflow": ovf_prev})
     for st in steps[1:]:
+        c = st.caps
         n_in, nv_in = int(bnd.count()), len(bnd.vars)
         deliveries = max_region = probe_len = 0
-        if mode == "mapsin":
+        if st.kind == "multiway":
             keys = keys_of(st.patterns[0], bnd.vars)
             plan0 = make_plan(st.patterns[0], bnd.vars)
-            if st.kind == "multiway":
-                deliveries, max_region, probe_len = _probe_fanout(
-                    store, plan0, bnd, s_route, whole_row=True)
-                bnd = ms.multiway_step(bnd, st.patterns, keys, cfg.row_cap,
-                                       cfg.out_cap, cfg.impl)
-            else:
-                deliveries, max_region, probe_len = _probe_fanout(
-                    store, plan0, bnd, s_route)
-                bnd = ms.mapsin_step(bnd, st.patterns[0], keys, cfg.probe_cap,
-                                     cfg.out_cap, cfg.impl)
-        else:
-            for pat in st.patterns:  # reduce-side has no multiway shortcut here
-                # the relation is scanned fresh (empty domain -> scan index)
+            deliveries, max_region, probe_len = _probe_fanout(
+                store, plan0, bnd, s_route, whole_row=True)
+            bnd = ms.multiway_step(bnd, st.patterns, keys, c.row_cap,
+                                   c.out_cap, cfg.impl)
+        elif st.kind == "mapsin":
+            keys = keys_of(st.patterns[0], bnd.vars)
+            plan0 = make_plan(st.patterns[0], bnd.vars)
+            deliveries, max_region, probe_len = _probe_fanout(
+                store, plan0, bnd, s_route)
+            bnd = ms.mapsin_step(bnd, st.patterns[0], keys, c.probe_cap,
+                                 c.out_cap, cfg.impl)
+        else:                    # reduce_side re-scans with an empty domain
+            for pat in st.patterns:
                 keys = keys_of(pat, ())
-                bnd = rs.local_reduce_step(bnd, pat, keys, cfg.scan_cap,
-                                           cfg.probe_cap, cfg.out_cap, cfg.impl)
+                bnd = rs.local_reduce_step(bnd, pat, keys, c.scan_cap,
+                                           c.probe_cap, c.out_cap, cfg.impl)
         rel = 0
         for pat in st.patterns:
-            r = ms.scan_pattern(pat, keys_of(pat, ()), cfg.scan_cap, cfg.impl)
+            r = ms.scan_pattern(pat, keys_of(pat, ()), c.scan_cap, cfg.impl)
             rel += int(r.count())
+        ovf_now = int(np.asarray(bnd.overflow))
         stats.append({"kind": st.kind, "n_in": n_in,
                       "n_out": int(bnd.count()), "nv": nv_in,
                       "relation": rel, "n_patterns": len(st.patterns),
                       "deliveries": deliveries, "route_shards": s_route,
                       "deliveries_max_region": max_region,
-                      "probe_len_max": probe_len})
+                      "probe_len_max": probe_len,
+                      "overflow": ovf_now - ovf_prev})
+        ovf_prev = ovf_now
     return bnd
-
-
-_MISSING = object()   # plan-cache sentinel (a cached value may be None)
-
-
-def tune_a2a_bucket_cap(store: TripleStore, patterns: Sequence[Pattern],
-                        cfg: ExecConfig, num_shards: int) -> int:
-    """Measured per-destination probe-bucket capacity for routing="a2a".
-
-    Runs the query once instrumented (host-side, cached per
-    (patterns, cfg, S) in the store's plan cache) and sizes the bucket to
-    the MAX per-region probe load any join step actually delivers —
-    exact for this (query, store, splits) since the fan-out accounting
-    and the a2a dispatch share range_intersects_region and the same
-    region boundaries, PROVIDED the tuning run saw the full binding
-    multiset. Replaces the static 2x-uniform-share default
-    (auto_bucket_cap), which over-allocates selective queries by orders
-    of magnitude and under-allocates heavy skew. `out_cap` stays the
-    drop-free fallback: it bounds the result (a shard never routes more
-    probes than it has bindings) and is returned when nothing was
-    measurable (a single-step scan that never probes) or when the tuning
-    run OVERFLOWED — the sharded run keeps out_cap rows PER SHARD, so a
-    truncated single-store measurement would under-size the buckets and
-    drop probes the static default delivered."""
-    ck = ("a2a_tune", tuple(patterns), cfg, num_shards)
-    sk = ("a2a_tune_steps",) + ck[1:]
-    hit = store.plan_cache.get(ck)
-    # early-return only when the companion step-caps entry is also still
-    # resident (both are re-read so the LRU refreshes them together): the
-    # two keys can otherwise diverge under eviction pressure, leaving
-    # tuned_step_answer_caps permanently None for a still-cached cap
-    if hit is not None and store.plan_cache.get(sk, _MISSING) is not _MISSING:
-        return hit
-    stats: list = []
-    tune_cfg = dataclasses.replace(cfg, route_shards=num_shards,
-                                   routing="broadcast", a2a_bucket_cap=0)
-    bnd = execute_local(store, patterns, "mapsin", tune_cfg, stats=stats)
-    loads = [st["deliveries_max_region"] for st in stats
-             if st["kind"] != "scan" and "deliveries_max_region" in st]
-    overflowed = int(np.asarray(bnd.overflow)) > 0
-    if not loads or overflowed:
-        cap = cfg.out_cap
-    else:
-        cap = min(max(max(loads), 8), cfg.out_cap)
-    # per-join-step answer caps ride along from the same measured run: the
-    # max range-entry count any probe of that step actually covers bounds
-    # the a2a return leg (min'd with the configured cap — never looser).
-    # None on overflow: a truncated tuning run under-measures (same
-    # reasoning as the bucket fallback above).
-    if overflowed:
-        step_caps = None
-    else:
-        step_caps = tuple(
-            min(max(st.get("probe_len_max", 0), 1),
-                cfg.row_cap if st["kind"] == "multiway" else cfg.probe_cap)
-            for st in stats if st["kind"] != "scan")
-    store.plan_cache[sk] = step_caps
-    store.plan_cache[ck] = cap
-    return cap
-
-
-def tuned_step_answer_caps(store: TripleStore, patterns: Sequence[Pattern],
-                           cfg: ExecConfig, num_shards: int):
-    """Per-join-step measured answer caps for routing="a2a" (the a2a
-    return leg ships `cap` key slots per routed probe — right-sizing it
-    from the measured max range length is what keeps batched serving's
-    match traffic proportional to actual matches). Computed by the same
-    cached tuning run as tune_a2a_bucket_cap; None when nothing reliable
-    was measured (overflowed tuning run) — callers fall back to the
-    configured caps."""
-    ck = ("a2a_tune_steps", tuple(patterns), cfg, num_shards)
-    if ck not in store.plan_cache:
-        tune_a2a_bucket_cap(store, patterns, cfg, num_shards)
-    return store.plan_cache.get(ck)
 
 
 def query_traffic_actual(stats: list, mode: str, num_shards: int,
@@ -476,6 +399,17 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
             else:
                 scanned += st["n_out"] * 8 + logn * 8  # index range scan
             continue
+        # a planner-selected reduce_side step shuffles and re-scans its
+        # relation whatever the comparison mode — pricing it as an index
+        # GET (zero probe records) would under-report hybrid plans
+        if st["kind"] == "reduce_side" or mode not in ("mapsin",
+                                                       "mapsin_routed"):
+            row_l = st["nv"] * 4 + 4
+            if s > 1:
+                net += st["n_patterns"] * (st["n_in"] * row_l
+                                           + st["relation"] * 16)
+            scanned += st["n_patterns"] * n_triples * 8
+            continue
         rec_routed, rec_bcast, match_b = 20, 44, 12
         deliv = (st["deliveries"] if st.get("route_shards") == s
                  and "deliveries" in st else st["n_in"])
@@ -485,39 +419,35 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
             if s > 1:
                 net += deliv * rec_routed * rounds + st["n_out"] * match_b
             scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
-        elif mode == "mapsin":
+        else:  # mode == "mapsin" (broadcast probe records)
             if s > 1:
                 net += (st["n_in"] * rec_bcast * (s - 1) * rounds
                         + st["n_out"] * match_b)
             scanned += st["n_in"] * rounds * logn * 8 + st["n_out"] * 8
-        else:  # reduce-side
-            row_l = st["nv"] * 4 + 4
-            if s > 1:
-                net += st["n_patterns"] * (st["n_in"] * row_l
-                                           + st["relation"] * 16)
-            scanned += st["n_patterns"] * n_triples * 8
     return {"network": net, "scanned": scanned, "total": net + scanned,
             "probe_bytes_routed": routed, "probe_bytes_broadcast": broadcast}
 
 
-def apply_dist_step(bnd: ms.Bindings, st: Step, keys, splits,
+def apply_dist_step(bnd: ms.Bindings, st: PlanStep, keys, splits,
                     cfg: ExecConfig, axis: str,
                     batched: bool = False) -> ms.Bindings:
-    """One distributed MAPSIN cascade step (join or multiway star) — the
-    shared dispatch behind execute_sharded's per-shard body and the serving
-    engine's batched template cascade (`batched=True` expects Bindings with
-    a leading query axis and routes the whole batch through ONE collective
-    round per step; see core/distributed.py)."""
+    """One distributed MAPSIN cascade step (join or multiway star) at the
+    step's OWN caps — the shared dispatch behind execute_sharded's
+    per-shard body and the serving engine's batched template cascade
+    (`batched=True` expects Bindings with a leading query axis and routes
+    the whole batch through ONE collective round per step; see
+    core/distributed.py)."""
+    c = st.caps
     if st.kind == "multiway":
         fn = (dist.batched_dist_multiway_step if batched
               else dist.dist_multiway_step)
-        return fn(bnd, st.patterns, keys, cfg.row_cap, cfg.out_cap, axis,
+        return fn(bnd, st.patterns, keys, c.row_cap, c.out_cap, axis,
                   cfg.impl, shard_splits=splits, routing=cfg.routing,
-                  bucket_cap=cfg.a2a_bucket_cap)
+                  bucket_cap=c.a2a_bucket_cap)
     fn = dist.batched_dist_mapsin_step if batched else dist.dist_mapsin_step
-    return fn(bnd, st.patterns[0], keys, cfg.probe_cap, cfg.out_cap, axis,
+    return fn(bnd, st.patterns[0], keys, c.probe_cap, c.out_cap, axis,
               cfg.impl, shard_splits=splits, routing=cfg.routing,
-              bucket_cap=cfg.a2a_bucket_cap)
+              bucket_cap=c.a2a_bucket_cap)
 
 
 def mesh_fingerprint(mesh, axis: str) -> tuple:
@@ -529,8 +459,10 @@ def mesh_fingerprint(mesh, axis: str) -> tuple:
             tuple(int(d.id) for d in np.ravel(mesh.devices)))
 
 
-def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
+def _sharded_fn(plan: PhysicalPlan, cfg: ExecConfig, axis: str,
                 splits_spo=None, splits_ops=None):
+    steps = plan.steps
+
     def fn(keys_spo, keys_ops):
         keys_spo = keys_spo.reshape(-1)
         keys_ops = keys_ops.reshape(-1)
@@ -540,10 +472,11 @@ def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
                                       if make_plan(pat, dom).index == 0
                                       else splits_ops)
         bnd = ms.scan_pattern(steps[0].patterns[0],
-                              keys_of(steps[0].patterns[0], ()), cfg.out_cap,
-                              cfg.impl)
+                              keys_of(steps[0].patterns[0], ()),
+                              steps[0].caps.out_cap, cfg.impl)
         for st in steps[1:]:
-            if mode == "mapsin":
+            c = st.caps
+            if st.kind in ("mapsin", "multiway"):
                 keys = keys_of(st.patterns[0], bnd.vars)
                 bnd = apply_dist_step(
                     bnd, st, keys, splits_of(st.patterns[0], bnd.vars),
@@ -551,50 +484,47 @@ def _sharded_fn(steps: list[Step], mode: str, cfg: ExecConfig, axis: str,
             else:
                 for pat in st.patterns:
                     keys = keys_of(pat, ())  # relation scan: empty domain
-                    bnd = rs.dist_reduce_step(bnd, pat, keys, cfg.scan_cap,
-                                              cfg.bucket_cap, cfg.probe_cap,
-                                              cfg.out_cap, axis, cfg.impl)
+                    bnd = rs.dist_reduce_step(bnd, pat, keys, c.scan_cap,
+                                              c.bucket_cap, c.probe_cap,
+                                              c.out_cap, axis, cfg.impl)
         return bnd.table, bnd.valid, bnd.overflow[None]
     return fn
 
 
-def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
-                    mesh, mode: str = "mapsin",
+def execute_sharded(store: TripleStore, query, mesh, mode: str = "mapsin",
                     cfg: ExecConfig = ExecConfig(), axis: str = "data",
-                    routing: str | None = None):
+                    routing: str | None = None, caps: Caps = Caps()):
     """Distributed execution under shard_map on `mesh` (store sharded on
-    `axis`). Probes are routed via the stored region splits: with
-    cfg.routing == "broadcast" every shard sees every probe and answers
-    only ranges intersecting its slice; with "a2a" each probe record is
-    shipped point-to-point to exactly the intersecting shards
-    (dist._dist_probe_a2a). `routing` overrides cfg.routing when given.
-    Returns (table (S*cap, nv), valid, overflow (S,), vars).
-
-    With routing == "a2a" and cfg.a2a_bucket_cap == 0 the per-destination
-    probe buckets are auto-tuned from the MEASURED probe->region fan-out
-    (tune_a2a_bucket_cap) instead of the static 2x-uniform-share
-    heuristic — the ROADMAP open item; pass a positive a2a_bucket_cap
-    (e.g. out_cap for the drop-free guarantee) to override."""
+    `axis`). `query` is a PhysicalPlan or a pattern sequence (compiled
+    cost-based with num_shards = the mesh size, so a2a capacities are
+    embedded from measurement at compile time — the planner subsumes the
+    old tune_a2a_bucket_cap call). Probes are routed via the stored
+    region splits: with cfg.routing == "broadcast" every shard sees every
+    probe and answers only ranges intersecting its slice; with "a2a" each
+    probe record is shipped point-to-point to exactly the intersecting
+    shards (dist._dist_probe_a2a). `routing` overrides cfg.routing when
+    given. Returns (table (S*cap, nv), valid, overflow (S,), vars)."""
     if routing is not None:
         cfg = dataclasses.replace(cfg, routing=routing)
-    if cfg.routing == "a2a" and cfg.a2a_bucket_cap == 0 and mode == "mapsin":
-        tuned = tune_a2a_bucket_cap(store, patterns, cfg,
-                                    int(mesh.shape[axis]))
-        cfg = dataclasses.replace(cfg, a2a_bucket_cap=tuned)
-    steps = plan_steps(patterns, cfg, store)
-    # derive final var order (static)
-    domain: list[str] = []
-    for st in steps:
-        for pat in st.patterns:
-            plan = make_plan(pat, domain)
-            domain.extend(plan.out_var_names)
-    # cache the jitted shard_map per (plan, mode, cfg, mesh): a fresh
-    # closure every call would defeat jax's jit cache (keyed on function
-    # identity) and re-trace + re-compile on each execution
-    ck = ("sharded", tuple(steps), mode, cfg, axis, mesh)
+    _check_plan_mode(query, mode)
+    s = int(mesh.shape[axis])
+    plan = as_plan(store, query, mode, cfg, caps, num_shards=s)
+    if (cfg.routing == "a2a"
+            and any(st.kind in ("mapsin", "multiway")
+                    and st.caps.a2a_bucket_cap == 0
+                    for st in plan.steps[1:])):
+        # pre-compiled plan without embedded a2a caps: embed now, with the
+        # drop-free bound read off the plan's OWN steps (caps=None) — the
+        # `caps` argument only parameterizes pattern-list compilation
+        from repro.core.planner import embed_a2a_caps
+        plan = embed_a2a_caps(store, plan, None, s)
+    # cache the jitted shard_map per (plan, cfg, mesh): a fresh closure
+    # every call would defeat jax's jit cache (keyed on function identity)
+    # and re-trace + re-compile on each execution
+    ck = ("sharded", plan, cfg, axis, mesh)
     jitted = store.plan_cache.get(ck)
     if jitted is None:
-        fn = _sharded_fn(steps, mode, cfg, axis,
+        fn = _sharded_fn(plan, cfg, axis,
                          splits_spo=np.asarray(store.splits_spo),
                          splits_ops=np.asarray(store.splits_ops))
         sharded = shard_map(
@@ -605,21 +535,7 @@ def execute_sharded(store: TripleStore, patterns: Sequence[Pattern],
         jitted = jax.jit(sharded)
         store.plan_cache[ck] = jitted
     table, valid, overflow = jitted(store.keys_spo, store.keys_ops)
-    return table, valid, overflow, tuple(domain)
-
-
-def query_traffic(patterns: Sequence[Pattern], mode: str, cfg: ExecConfig,
-                  num_shards: int) -> int:
-    """Total modeled interconnect bytes for a query (paper's network metric)."""
-    steps = plan_steps(patterns, cfg)
-    domain: list[str] = []
-    total = 0
-    for st in steps:
-        total += step_traffic_bytes(st, mode, cfg, num_shards, len(domain))
-        for pat in st.patterns:
-            plan = make_plan(pat, domain)
-            domain.extend(plan.out_var_names)
-    return total
+    return table, valid, overflow, plan.var_order
 
 
 def rows_set(table, valid, n_vars: int) -> set[tuple[int, ...]]:

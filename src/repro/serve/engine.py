@@ -33,20 +33,26 @@ tenant asks "students of <their> department"). The engine exploits that:
   ``all_to_all`` pair (``dist_probe_batched``) before a vmapped local
   merge scatters matches back to per-query slots — the batch shares
   the collective, not just the compilation. With ``routing="a2a"`` and
-  ``a2a_bucket_cap == 0`` every dispatch's caps come from measurement,
-  amortized across the batch: per-destination probe buckets are the
-  SUM of the members' tuned caps (``tune_a2a_bucket_cap``, cached per
-  distinct query — the exact drop-free bound) and the answer return
-  legs the MAX of their measured per-step range lengths
-  (``tuned_step_answer_caps``), both quantized to bound compile
-  diversity.
+  ``caps.a2a_bucket_cap == 0`` every dispatch's caps come from the
+  PLAN: ``compile_plan`` embeds the measured per-step a2a capacities
+  (``planner.embed_a2a_caps``, cached per distinct query) and the
+  engine only aggregates them per dispatch — per-destination probe
+  buckets are the SUM of the members' embedded bucket caps (the exact
+  drop-free bound) and the answer return legs the MAX of their
+  embedded per-step answer caps, both quantized (``quantize_cap``) to
+  bound compile diversity. The engine never calls a tune_* function.
 
 Results are per-slot Bindings — bit-identical row sets to
-``execute_local`` on the same (patterns, cfg), which tests verify
+``execute_local`` on the same (patterns, cfg, caps), which tests verify
 against ``execute_oracle`` as well (sharded results keep ``out_cap``
-rows PER SHARD, like ``execute_sharded``). MAPSIN mode only:
+rows PER SHARD, like ``execute_sharded``). MAPSIN operators only:
 reduce-side re-scans relations with an empty domain, which a
-seeded-constant template cannot express.
+seeded-constant template cannot express — the engine compiles with
+``planner.ENGINE_OPERATORS``, so under a truncating cap budget (probe
+fan-out beyond probe_cap) ``execute_local``'s unrestricted planner may
+switch a step to the exact reduce_side fallback while the engine
+truncates (and surfaces it in ``QueryResult.overflow`` / ``.stats``);
+with non-truncating caps the row sets are identical.
 """
 from __future__ import annotations
 
@@ -60,11 +66,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mapsin as ms
-from repro.core.bgp import (ExecConfig, Step, apply_dist_step,
-                            mesh_fingerprint, plan_steps,
-                            tune_a2a_bucket_cap, tuned_step_answer_caps)
+from repro.core.bgp import ExecConfig, apply_dist_step, mesh_fingerprint
 from repro.core.mapsin import Bindings, apply_residual, compact
 from repro.core.plan import make_plan, probe_ranges, residual_values
+from repro.core.planner import (ENGINE_OPERATORS, Caps, PhysicalPlan,
+                                PlanStep, compile_plan, quantize_cap)
 from repro.core.rdf import Pattern, is_var, unpack3
 from repro.core.triple_store import LRUCache, TripleStore
 from repro.serve.sparql import ParsedQuery, parse_bgp
@@ -76,8 +82,13 @@ class EngineBusy(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class Template:
-    """Canonical plan shape: steps over renamed variables + const slots."""
-    steps: tuple[Step, ...]
+    """Canonical plan shape: steps over renamed variables + const slots.
+    Steps are ``planner.PlanStep``s whose caps are the engine's BASE
+    budget — any per-query embedded (tuned) caps are stripped so that
+    same-shape queries with different measured fan-outs still share one
+    compiled batched cascade (the per-query values ride the requests and
+    are aggregated per dispatch)."""
+    steps: tuple[PlanStep, ...]
     const_vars: tuple[str, ...]     # ("?_k0", ...) pre-bound slot columns
 
     @property
@@ -86,8 +97,10 @@ class Template:
 
 
 def plan_signature(store: TripleStore, patterns: Sequence[Pattern],
-                   cfg: ExecConfig, mode: str = "mapsin"):
-    """Plan the query, then canonicalize the ordered steps.
+                   cfg: ExecConfig = ExecConfig(), caps: Caps = Caps(),
+                   mode: str = "mapsin", plan: PhysicalPlan | None = None):
+    """Compile the query (cost-based planner, engine operator set), then
+    canonicalize the ordered steps.
 
     Returns ``(template, consts, var_order)``: the hashable Template (the
     bucket key — equal templates share one compiled batched cascade), the
@@ -95,7 +108,10 @@ def plan_signature(store: TripleStore, patterns: Sequence[Pattern],
     (original names, exactly ``execute_local``'s order). Repeated
     constants share a slot, which preserves multiway prefix[0] equality
     in the template exactly as in the concrete plan."""
-    steps = tuple(plan_steps(patterns, cfg, store))
+    if plan is None:
+        plan = compile_plan(store, patterns, caps, mode=mode,
+                            reorder=cfg.reorder,
+                            operators=ENGINE_OPERATORS)
     rename: dict[str, str] = {}
     slots: dict[int, int] = {}
     const_vals: list[int] = []
@@ -112,16 +128,12 @@ def plan_signature(store: TripleStore, patterns: Sequence[Pattern],
         return f"?_k{slots[cid]}"
 
     tsteps = tuple(
-        Step(st.kind, tuple(Pattern(sub(p.s), sub(p.p), sub(p.o))
-                            for p in st.patterns))
-        for st in steps)
-    var_order: list[str] = []
-    for st in steps:
-        for pat in st.patterns:
-            var_order.extend(make_plan(pat, var_order).out_var_names)
+        PlanStep(st.kind, tuple(Pattern(sub(p.s), sub(p.p), sub(p.o))
+                                for p in st.patterns), caps)
+        for st in plan.steps)
     template = Template(tsteps, tuple(f"?_k{i}"
                                       for i in range(len(const_vals))))
-    return template, np.asarray(const_vals, np.int32), tuple(var_order)
+    return template, np.asarray(const_vals, np.int32), plan.var_order
 
 
 def _seed_scan(pattern: Pattern, const_vars: tuple[str, ...],
@@ -179,6 +191,12 @@ class QueryResult:
     rows: np.ndarray                # (n_valid, n_vars) int32 valid rows
     overflow: int
     select: tuple[str, ...] | None = None   # SPARQL projection, if any
+    stats: dict | None = None       # per-step execution stats from the
+                                    # batched cascade: {"kinds": (...),
+                                    # "overflow_per_step": (...)} — the
+                                    # truncation counters that localize an
+                                    # undersized cap to the step that
+                                    # dropped rows (never silent)
 
     def rows_set(self, var_order: Sequence[str] | None = None) -> set:
         vs = tuple(var_order) if var_order is not None else self.vars
@@ -230,7 +248,8 @@ class ServeEngine:
     """
 
     def __init__(self, store: TripleStore, dictionary=None,
-                 cfg: ExecConfig = ExecConfig(), mode: str = "mapsin",
+                 cfg: ExecConfig = ExecConfig(), caps: Caps = Caps(),
+                 mode: str = "mapsin",
                  max_batch: int = 32, max_queue: int = 256,
                  compile_cache_size: int = 32, starvation_limit: int = 4,
                  mesh=None, axis: str = "data",
@@ -245,7 +264,7 @@ class ServeEngine:
         if min_batch > max_batch:
             raise ValueError("min_batch cannot exceed max_batch")
         self.store, self.dictionary = store, dictionary
-        self.cfg, self.mode = cfg, mode
+        self.cfg, self.caps, self.mode = cfg, caps, mode
         self.mesh, self.axis = mesh, axis
         self.max_batch, self.max_queue = max_batch, max_queue
         self.min_batch, self.max_wait_s = min_batch, max_wait_s
@@ -271,10 +290,14 @@ class ServeEngine:
         return len(self._queue)
 
     def submit(self, query, arrival: float | None = None) -> int:
-        """Enqueue one query; returns its request id. Raises EngineBusy
-        when the queue is at max_queue (admission control) and ValueError
-        for malformed SPARQL / unknown terms (fail at the front door)."""
+        """Enqueue one query (SPARQL text, ParsedQuery, a compiled
+        PhysicalPlan, or a Pattern sequence); returns its request id.
+        Raises EngineBusy when the queue is at max_queue (admission
+        control) and ValueError for malformed SPARQL / unknown terms /
+        plans the template cascade cannot express (fail at the front
+        door)."""
         select = None
+        plan = None
         if isinstance(query, str):
             if self.dictionary is None:
                 raise ValueError("SPARQL text needs a Dictionary-equipped "
@@ -283,22 +306,46 @@ class ServeEngine:
         if isinstance(query, ParsedQuery):
             select = query.select
             patterns = tuple(query.patterns)
+        elif isinstance(query, PhysicalPlan):
+            if any(st.kind == "reduce_side" for st in query.steps):
+                raise ValueError("a seeded template cascade cannot express "
+                                 "reduce_side steps — compile the plan with "
+                                 "planner.ENGINE_OPERATORS")
+            # the engine executes templates at ITS base budget; a plan
+            # compiled with a larger budget would silently truncate more
+            # than its own caps promise — reject at the front door
+            over = [(i, dim) for i, st in enumerate(query.steps)
+                    for dim in ("out_cap", "scan_cap", "probe_cap",
+                                "row_cap")
+                    if getattr(st.caps, dim) > getattr(self.caps, dim)]
+            if over:
+                raise ValueError(
+                    f"plan caps exceed the engine budget at {over[:3]} — "
+                    f"build the engine with caps >= the plan's, or compile "
+                    f"the plan with the engine's caps")
+            plan = query
+            patterns = query.patterns
         else:
             patterns = tuple(query)
         if not patterns:
             raise ValueError("empty query")
         if len(self._queue) >= self.max_queue:
             raise EngineBusy(f"queue depth {len(self._queue)} at max_queue")
-        # cfg is part of the signature key: planning (reorder/multiway
-        # grouping) depends on it, so a config change must re-plan
-        sig_key = ("sig", patterns, self.cfg)
+        # cfg AND caps are part of the signature key: planning (ordering,
+        # multiway grouping, embedded capacities) depends on both, so a
+        # config change must re-plan; a user-supplied plan keys on itself
+        sig_key = ("sig", plan if plan is not None else patterns,
+                   self.cfg, self.caps)
         hit = self._signatures.get(sig_key)
         if hit is None:
+            if plan is None:
+                plan = self._compile(patterns)
             template, consts, var_order = plan_signature(
-                self.store, patterns, self.cfg, self.mode)
+                self.store, patterns, self.cfg, self.caps, self.mode,
+                plan=plan)
             tid = self._template_ids.setdefault(template,
                                                 len(self._template_ids))
-            tuned, step_caps = self._maybe_tune(patterns)
+            tuned, step_caps = self._plan_caps(plan)
             hit = (tid, template, consts, var_order, tuned, step_caps)
             self._signatures[sig_key] = hit
         tid, template, consts, var_order, tuned, step_caps = hit
@@ -311,36 +358,37 @@ class ServeEngine:
 
     # --- batched execution ----------------------------------------------
 
-    def _maybe_tune(self, patterns) -> tuple:
-        """Measured tuning, amortized two ways: the tuning run itself is
-        per DISTINCT query (first submit only — cached on the store,
-        exactly the cost execute_sharded pays per query), and the values
-        size every batch the query ever rides in. Returns (bucket cap,
-        per-join-step answer caps): the bucket caps SUM across batch
+    def _compile(self, patterns) -> PhysicalPlan:
+        """Compile the query with the engine's operator set. With a mesh,
+        a2a routing, and an unpinned bucket cap, compile_plan embeds the
+        measured a2a capacities into the plan's steps (one instrumented
+        run per DISTINCT query, cached on the store — exactly the cost
+        execute_sharded pays); the engine reads the caps off the plan,
+        it never tunes anything itself."""
+        num_shards = (self.store.num_shards
+                      if (self.mesh is not None
+                          and self.cfg.routing == "a2a"
+                          and self.caps.a2a_bucket_cap == 0) else 0)
+        return compile_plan(self.store, patterns, self.caps, mode=self.mode,
+                            reorder=self.cfg.reorder,
+                            operators=ENGINE_OPERATORS,
+                            routing=self.cfg.routing, num_shards=num_shards)
+
+    def _plan_caps(self, plan: PhysicalPlan) -> tuple:
+        """Per-request capacity values read OFF the plan: (bucket cap,
+        per-join-step answer caps). The bucket caps SUM across batch
         members (_bucket_cap_for), the answer caps MAX across them
         (_step_caps_for — the a2a return leg is per probe, so the widest
-        member's measured range bounds everyone). ((0, None) when tuning
-        is off.)"""
+        member's embedded cap bounds everyone). ((0, None) when the plan
+        carries no embedded a2a capacities.)"""
         if (self.mesh is None or self.cfg.routing != "a2a"
-                or self.cfg.a2a_bucket_cap > 0):
+                or self.caps.a2a_bucket_cap > 0):
             return 0, None
-        tuned = tune_a2a_bucket_cap(self.store, patterns, self.cfg,
-                                    self.store.num_shards)
-        step_caps = tuned_step_answer_caps(self.store, patterns, self.cfg,
-                                           self.store.num_shards)
+        tuned = max((st.caps.a2a_bucket_cap for st in plan.steps[1:]),
+                    default=0)
+        step_caps = tuple(st.caps.row_cap if st.kind == "multiway"
+                          else st.caps.probe_cap for st in plan.steps[1:])
         return tuned, step_caps
-
-    @staticmethod
-    def _quantize_cap(cap: int) -> int:
-        """Round a bucket cap UP onto the {2^k, 3*2^(k-1)} grid (8, 12,
-        16, 24, 32, 48, ...): dispatch caps are compile-time constants,
-        so free-form sums would compile a cascade per distinct batch
-        composition; two sizes per octave bounds compile diversity at
-        <= 33% capacity overshoot."""
-        if cap <= 8:
-            return 8
-        k = 1 << (cap - 1).bit_length()            # next pow2 >= cap
-        return (3 * k) // 4 if cap <= (3 * k) // 4 else k
 
     def _bucket_cap_for(self, reqs: list, batch: int) -> int:
         """Per-destination a2a probe-bucket capacity for ONE dispatch: the
@@ -355,37 +403,37 @@ class ServeEngine:
         """
         if self.mesh is None or self.cfg.routing != "a2a":
             return 0
-        if self.cfg.a2a_bucket_cap > 0:
-            per_query = min(self.cfg.a2a_bucket_cap, self.cfg.out_cap)
+        if self.caps.a2a_bucket_cap > 0:
+            per_query = min(self.caps.a2a_bucket_cap, self.caps.out_cap)
             return batch * per_query
-        # untuned slots (possible only when a request was admitted under a
-        # different cfg than it dispatches with) fall back to the drop-free
-        # out_cap bound
-        tuned = [r.tuned if r.tuned > 0 else self.cfg.out_cap for r in reqs]
+        # unembedded slots (possible only when a request was admitted under
+        # a different config than it dispatches with) fall back to the
+        # drop-free out_cap bound
+        tuned = [r.tuned if r.tuned > 0 else self.caps.out_cap for r in reqs]
         total = sum(tuned) + (batch - len(reqs)) * (tuned[0] if tuned
-                                                    else self.cfg.out_cap)
-        return min(self._quantize_cap(total), batch * self.cfg.out_cap)
+                                                    else self.caps.out_cap)
+        return min(quantize_cap(total), batch * self.caps.out_cap)
 
     def _step_caps_for(self, reqs: list, template: Template) -> tuple:
         """Per-join-step a2a answer caps for one dispatch: the MAX of the
-        members' measured range lengths per step (quantized; a probe's
-        answers are per probe, not per batch), min'd with the configured
-        probe/row caps — never looser than the config, and falling back
-        to it for unmeasured members. Right-sizes the dominant return-leg
+        members' plan-embedded caps per step (quantized; a probe's
+        answers are per probe, not per batch), min'd with the base
+        probe/row caps — never looser than the budget, and falling back
+        to it for unembedded members. Right-sizes the dominant return-leg
         payload: a point-probe step ships 8 key slots per routed probe
         instead of the configured probe_cap."""
-        cfg_caps = tuple(self.cfg.row_cap if st.kind == "multiway"
-                         else self.cfg.probe_cap
-                         for st in template.steps[1:])
+        base_caps = tuple(st.caps.row_cap if st.kind == "multiway"
+                          else st.caps.probe_cap
+                          for st in template.steps[1:])
         if (self.mesh is None or self.cfg.routing != "a2a"
-                or self.cfg.a2a_bucket_cap > 0):
-            return cfg_caps
-        caps = list(cfg_caps)
-        for i, dflt in enumerate(cfg_caps):
-            measured = [r.step_caps[i] for r in reqs
+                or self.caps.a2a_bucket_cap > 0):
+            return base_caps
+        caps = list(base_caps)
+        for i, dflt in enumerate(base_caps):
+            embedded = [r.step_caps[i] for r in reqs
                         if r.step_caps is not None and i < len(r.step_caps)]
-            if measured and len(measured) == len(reqs):
-                caps[i] = min(self._quantize_cap(max(measured)), dflt)
+            if embedded and len(embedded) == len(reqs):
+                caps[i] = min(quantize_cap(max(embedded)), dflt)
         return tuple(caps)
 
     def _payload_bytes(self, bucket_cap: int, step_caps: tuple) -> int:
@@ -395,12 +443,10 @@ class ServeEngine:
         network)."""
         if self.mesh is None or self.cfg.routing != "a2a":
             return 0
+        from repro.core.bgp import a2a_step_payload_bytes
         s = self.store.num_shards
-        total = 0
-        for cap in step_caps:
-            total += (s - 1) * bucket_cap * (8 + 8)             # lo/hi out
-            total += (s - 1) * bucket_cap * (cap * 8 + 4 + 4)   # ans/cnt/miss
-        return total
+        return sum(a2a_step_payload_bytes(bucket_cap, cap, s)
+                   for cap in step_caps)
 
     def _compiled_batch(self, tid: int, template: Template, batch: int,
                         bucket_cap: int, step_caps: tuple):
@@ -410,7 +456,7 @@ class ServeEngine:
         # or re-sized buckets can never reuse a stale compiled cascade
         mesh_id = (None if self.mesh is None
                    else mesh_fingerprint(self.mesh, self.axis))
-        key = ("batched", tid, batch, self.cfg, mesh_id,
+        key = ("batched", tid, batch, self.cfg, self.caps, mesh_id,
                self.store.layout_key, bucket_cap, step_caps)
         hit = self._compiled.get(key)
         if hit is None:
@@ -431,16 +477,20 @@ class ServeEngine:
             keys_of = lambda pat, dom: (
                 keys_spo if make_plan(pat, dom).index == 0 else keys_ops)
             bnd = _seed_scan(first, const_vars, keys_of(first, const_vars),
-                             consts, cfg.out_cap, cfg.impl, scratch)
+                             consts, steps[0].caps.out_cap, cfg.impl,
+                             scratch)
+            ovfs = [bnd.overflow]
             for st in steps[1:]:
+                c = st.caps
                 keys = keys_of(st.patterns[0], bnd.vars)
                 if st.kind == "multiway":
                     bnd = ms.multiway_step(bnd, st.patterns, keys,
-                                           cfg.row_cap, cfg.out_cap, cfg.impl)
+                                           c.row_cap, c.out_cap, cfg.impl)
                 else:
                     bnd = ms.mapsin_step(bnd, st.patterns[0], keys,
-                                         cfg.probe_cap, cfg.out_cap, cfg.impl)
-            return bnd
+                                         c.probe_cap, c.out_cap, cfg.impl)
+                ovfs.append(bnd.overflow)
+            return bnd, jnp.stack(ovfs)          # cumulative, per step
 
         batched = jax.vmap(one, in_axes=(None, None, 0, 0))
         donate = (3,) if jax.default_backend() in ("tpu", "gpu") else ()
@@ -461,9 +511,15 @@ class ServeEngine:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         cfg = self.cfg
-        if cfg.routing == "a2a":
-            cfg = dataclasses.replace(cfg, a2a_bucket_cap=bucket_cap)
         steps, const_vars = template.steps, template.const_vars
+        # per-dispatch effective steps: the batch-aggregated a2a bucket cap
+        # and the per-join-step answer caps are compile-time constants
+        # embedded into each step's caps (apply_dist_step reads them there)
+        eff_steps = [steps[0]] + [
+            dataclasses.replace(st, caps=dataclasses.replace(
+                st.caps, probe_cap=step_caps[i], row_cap=step_caps[i],
+                a2a_bucket_cap=bucket_cap))
+            for i, st in enumerate(steps[1:])]
         first = steps[0].patterns[0]
         first_plan = make_plan(first, const_vars)
         scratch_vars = const_vars + first_plan.out_var_names
@@ -482,22 +538,24 @@ class ServeEngine:
             scr = self._scratch(scratch_vars, batch)
             bnd = jax.vmap(
                 lambda c, s: _seed_scan(first, const_vars, seed_keys, c,
-                                        cfg.out_cap, cfg.impl, s))(consts, scr)
-            for i, st in enumerate(steps[1:]):
+                                        steps[0].caps.out_cap, cfg.impl,
+                                        s))(consts, scr)
+            ovfs = [bnd.overflow]
+            for st in eff_steps[1:]:
                 keys = keys_of(st.patterns[0], bnd.vars)
-                # measured per-step answer cap (right-sized return leg)
-                scfg = dataclasses.replace(cfg, probe_cap=step_caps[i],
-                                           row_cap=step_caps[i])
                 bnd = apply_dist_step(
                     bnd, st, keys, splits_of(st.patterns[0], bnd.vars),
-                    scfg, axis, batched=True)
-            return bnd.table[None], bnd.valid[None], bnd.overflow[None]
+                    cfg, axis, batched=True)
+                ovfs.append(bnd.overflow)
+            step_ovf = jnp.stack(ovfs)           # (n_steps, batch) cumulative
+            return (bnd.table[None], bnd.valid[None], bnd.overflow[None],
+                    step_ovf[None])
 
         sharded = shard_map(
             fn, mesh=self.mesh,
             in_specs=(P(axis, None), P(axis, None), P(None, None)),
             out_specs=(P(axis, None, None, None), P(axis, None, None),
-                       P(axis, None)),
+                       P(axis, None), P(axis, None, None)),
             check_rep=False)
         return jax.jit(sharded), scratch_vars
 
@@ -505,19 +563,24 @@ class ServeEngine:
                   consts: np.ndarray, bucket_cap: int, step_caps: tuple):
         """Run one compiled batched cascade; returns per-shard numpy views
         (tables (S, batch, out_cap, nv), valids (S, batch, out_cap),
-        overflow (S, batch)) — S == 1 on the local (mesh-less) path."""
+        overflow (S, batch), step_ovf (S, batch, n_steps) cumulative) —
+        S == 1 on the local (mesh-less) path."""
         jitted, scratch_vars = self._compiled_batch(tid, template, batch,
                                                     bucket_cap, step_caps)
         if self.mesh is None:
-            out = jitted(self.store.flat_keys(0), self.store.flat_keys(1),
-                         jnp.asarray(consts),
-                         self._scratch(scratch_vars, batch))
+            out, step_ovf = jitted(self.store.flat_keys(0),
+                                   self.store.flat_keys(1),
+                                   jnp.asarray(consts),
+                                   self._scratch(scratch_vars, batch))
             return (np.asarray(out.table)[None], np.asarray(out.valid)[None],
-                    np.asarray(out.overflow)[None])
-        t, v, o = jitted(self.store.keys_spo, self.store.keys_ops,
-                         jnp.asarray(consts))
+                    np.asarray(out.overflow)[None],
+                    np.asarray(step_ovf)[None])
+        t, v, o, so = jitted(self.store.keys_spo, self.store.keys_ops,
+                             jnp.asarray(consts))
         self.a2a_payload_bytes += self._payload_bytes(bucket_cap, step_caps)
-        return np.asarray(t), np.asarray(v), np.asarray(o)
+        # (S, n_steps, batch) -> (S, batch, n_steps)
+        return (np.asarray(t), np.asarray(v), np.asarray(o),
+                np.transpose(np.asarray(so), (0, 2, 1)))
 
     def precompile(self, query, batches: Sequence[int] | None = None):
         """Compile (and warm) the query's template cascade for the given
@@ -533,10 +596,11 @@ class ServeEngine:
             query = parse_bgp(query, self.dictionary)
         patterns = tuple(query.patterns if isinstance(query, ParsedQuery)
                          else query)
+        plan = self._compile(patterns)
         template, _, _ = plan_signature(self.store, patterns, self.cfg,
-                                        self.mode)
+                                        self.caps, self.mode, plan=plan)
         tid = self._template_ids.setdefault(template, len(self._template_ids))
-        tuned, step_caps = self._maybe_tune(patterns)
+        tuned, step_caps = self._plan_caps(plan)
         if batches is None:
             batches = []
             b = 1
@@ -557,8 +621,9 @@ class ServeEngine:
     def _scratch(self, scratch_vars: tuple[str, ...], batch: int) -> Bindings:
         return Bindings(
             scratch_vars,
-            jnp.zeros((batch, self.cfg.out_cap, len(scratch_vars)), jnp.int32),
-            jnp.zeros((batch, self.cfg.out_cap), bool),
+            jnp.zeros((batch, self.caps.out_cap, len(scratch_vars)),
+                      jnp.int32),
+            jnp.zeros((batch, self.caps.out_cap), bool),
             jnp.zeros((batch,), jnp.int32))
 
     def _run_bucket(self, reqs: list[_Request]) -> list[QueryResult]:
@@ -571,11 +636,12 @@ class ServeEngine:
         for i in range(n, batch):                    # padding slots re-run
             consts[i] = reqs[0].consts               # request 0, discarded
         # (S, batch, out_cap, nv) per-shard tables; S == 1 without a mesh
-        tables, valids, overflow = self._dispatch(
+        tables, valids, overflow, step_ovf = self._dispatch(
             reqs[0].tid, template, batch, consts,
             self._bucket_cap_for(reqs, batch),
             self._step_caps_for(reqs, template))
         nk = template.n_consts
+        kinds = tuple(st.kind for st in template.steps)
         self.dispatches += 1
         self.dispatched_queries += n
         results = []
@@ -583,8 +649,14 @@ class ServeEngine:
             rows = np.concatenate([tables[s, i][valids[s, i]]
                                    for s in range(tables.shape[0])]
                                   )[:, nk:nk + len(r.var_order)]
+            # cumulative per-step counters summed over shards -> deltas:
+            # which step dropped rows (probe vs out-cap truncation locale)
+            cum = step_ovf[:, i, :].sum(axis=0)
+            per_step = tuple(int(x) for x in np.diff(cum, prepend=0))
+            stats = {"kinds": kinds, "overflow_per_step": per_step}
             results.append(QueryResult(r.rid, r.var_order, rows,
-                                       int(overflow[:, i].sum()), r.select))
+                                       int(overflow[:, i].sum()), r.select,
+                                       stats))
         return results
 
     # --- scheduling ------------------------------------------------------

@@ -1,6 +1,6 @@
 """Planner tests: variable-counting reorder, star grouping, traffic model."""
-from repro.core import ExecConfig, Pattern, plan_steps, query_traffic
-from repro.core.bgp import order_patterns
+from repro.core import Caps, Pattern, build_store, compile_plan, query_traffic
+from repro.core.bgp import order_patterns, plan_steps
 
 
 def test_variable_counting_order():
@@ -23,18 +23,22 @@ def test_connected_patterns_preferred():
 def test_multiway_grouping_star():
     pats = [Pattern("?x", 1, 2),
             Pattern("?x", 3, "?a"), Pattern("?x", 4, "?b"), Pattern("?x", 5, "?c")]
-    steps = plan_steps(pats, ExecConfig(multiway=True))
-    assert [s.kind for s in steps] == ["scan", "multiway"]
-    assert len(steps[1].patterns) == 3
-    steps = plan_steps(pats, ExecConfig(multiway=False))
+    plan = compile_plan(None, pats, multiway=True)
+    assert [s.kind for s in plan.steps] == ["scan", "multiway"]
+    assert len(plan.steps[1].patterns) == 3
+    plan = compile_plan(None, pats, multiway=False)
+    assert [s.kind for s in plan.steps] == ["scan", "mapsin", "mapsin",
+                                            "mapsin"]
+    # deprecated shim still speaks the legacy kind vocabulary
+    steps = plan_steps(pats, multiway=False)
     assert [s.kind for s in steps] == ["scan", "join", "join", "join"]
 
 
 def test_multiway_not_grouped_across_dependency():
     # third pattern consumes ?a produced by the second -> cannot batch
     pats = [Pattern("?x", 1, 2), Pattern("?x", 3, "?a"), Pattern("?a", 4, "?b")]
-    steps = plan_steps(pats, ExecConfig(multiway=True))
-    assert [s.kind for s in steps] == ["scan", "join", "join"]
+    plan = compile_plan(None, pats, multiway=True)
+    assert [s.kind for s in plan.steps] == ["scan", "mapsin", "mapsin"]
 
 
 def test_traffic_model_mapsin_beats_reduce():
@@ -42,22 +46,44 @@ def test_traffic_model_mapsin_beats_reduce():
     reduce-side ships relations — for selective queries MAPSIN must win."""
     pats = [Pattern("?x", 1, 2), Pattern("?x", 3, "?a"), Pattern("?x", 4, "?b")]
     # selective query: small solution multiset vs large scanned relation
-    cfg = ExecConfig(out_cap=1 << 8, probe_cap=4, bucket_cap=1 << 12)
-    m = query_traffic(pats, "mapsin", cfg, num_shards=16)
-    mr = query_traffic(pats, "mapsin_routed", cfg, num_shards=16)
-    r = query_traffic(pats, "reduce", cfg, num_shards=16)
+    caps = Caps(out_cap=1 << 8, probe_cap=4, bucket_cap=1 << 12)
+    m = query_traffic(pats, "mapsin", caps, num_shards=16)
+    mr = query_traffic(pats, "mapsin_routed", caps, num_shards=16)
+    r = query_traffic(pats, "reduce", caps, num_shards=16)
     assert mr < m < r
     # the routed protocol is shard-count-scalable: O(S*B), not O(S^2*B)
-    m1k = query_traffic(pats, "mapsin_routed", cfg, num_shards=1024)
-    assert m1k / query_traffic(pats, "mapsin_routed", cfg, num_shards=16) < 80
+    m1k = query_traffic(pats, "mapsin_routed", caps, num_shards=1024)
+    assert m1k / query_traffic(pats, "mapsin_routed", caps, num_shards=16) < 80
     # single shard: no network at all
-    assert query_traffic(pats, "mapsin", cfg, num_shards=1) == 0
+    assert query_traffic(pats, "mapsin", caps, num_shards=1) == 0
 
 
 def test_multiway_saves_rounds():
     star = [Pattern("?x", 1, 2)] + [Pattern("?x", 10 + i, f"?v{i}") for i in range(4)]
-    cfg_mw = ExecConfig(multiway=True, row_cap=8, probe_cap=8)
-    cfg_2w = ExecConfig(multiway=False, row_cap=8, probe_cap=8)
-    m_mw = query_traffic(star, "mapsin", cfg_mw, num_shards=16)
-    m_2w = query_traffic(star, "mapsin", cfg_2w, num_shards=16)
+    caps = Caps(row_cap=8, probe_cap=8)
+    plan_mw = compile_plan(None, star, caps, multiway=True)
+    plan_2w = compile_plan(None, star, caps, multiway=False)
+    m_mw = query_traffic(plan_mw, "mapsin", caps, num_shards=16)
+    m_2w = query_traffic(plan_2w, "mapsin", caps, num_shards=16)
     assert m_mw < m_2w  # one row-GET round vs n probe rounds
+
+
+def test_cost_ordering_beats_heuristic_on_cardinality_trap():
+    """A 1-var pattern with a HUGE relation vs a 2-var pattern with a tiny
+    one: variable counting scans the big one first; the cost-based search
+    must start from the cheap relation instead."""
+    import numpy as np
+    rng = np.random.RandomState(0)
+    # pred 100: 1000 triples with o=7 (the trap: bound-o but unselective);
+    # pred 101: 50 triples (?x 101 ?p)
+    big = np.stack([rng.randint(0, 200, 1000), np.full(1000, 100),
+                    np.full(1000, 7)], 1).astype(np.int32)
+    small = np.stack([rng.randint(0, 200, 50), np.full(50, 101),
+                      rng.randint(0, 40, 50)], 1).astype(np.int32)
+    store = build_store(np.concatenate([big, small]), 1)
+    pats = [Pattern("?x", 100, 7), Pattern("?x", 101, "?p")]
+    heur = order_patterns(pats, store=store)
+    assert heur[0] == pats[0]                   # variable counting: 1 var first
+    plan = compile_plan(store, pats, ordering="cost")
+    assert plan.steps[0].patterns[0] == pats[1]  # cost: small relation first
+    assert plan.ordering == "cost"

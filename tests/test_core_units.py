@@ -101,16 +101,16 @@ def test_lru_cache_evicts_cold_keeps_hot():
 def test_plan_cache_eviction_keeps_hot_entries_compiled():
     """Churning the plan cache with cold entries must not evict the
     compiled cascade of a query that keeps executing (the hot tenant)."""
-    from repro.core import ExecConfig, execute_local
+    from repro.core import Caps, execute_local
     from repro.core.triple_store import LRUCache
     rng = np.random.RandomState(0)
     tr = np.stack([rng.randint(0, 20, 200), rng.randint(100, 103, 200),
                    rng.randint(0, 20, 200)], 1).astype(np.int32)
     store = build_store(tr, 1)
     store.plan_cache = LRUCache(maxsize=16)
-    cfg = ExecConfig(out_cap=1024, probe_cap=16)
+    caps = Caps(out_cap=1024, probe_cap=16)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    execute_local(store, pats, "mapsin", cfg)
+    execute_local(store, pats, "mapsin", caps=caps)
     ck = [k for k in store.plan_cache if k[0] == "cascade"]
     assert len(ck) == 1
     jitted_before = store.plan_cache[ck[0]]
@@ -119,7 +119,7 @@ def test_plan_cache_eviction_keeps_hot_entries_compiled():
     for i in range(100):
         store.plan_cache[("cold", i)] = i
         if i % 4 == 0:
-            execute_local(store, pats, "mapsin", cfg)
+            execute_local(store, pats, "mapsin", caps=caps)
     assert ck[0] in store.plan_cache
     assert store.plan_cache[ck[0]] is jitted_before  # never recompiled
     assert ("cold", 0) not in store.plan_cache       # cold entries evicted

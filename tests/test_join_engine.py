@@ -7,10 +7,10 @@ try:
 except ImportError:  # property tests skip; the suite still runs
     from _hypothesis_stub import given, settings, st
 
-from repro.core import (ExecConfig, Pattern, build_store, execute_local,
-                        execute_oracle, rows_set)
+from repro.core import (Caps, Pattern, build_store, compile_plan,
+                        execute_local, execute_oracle, rows_set)
 
-CFG = ExecConfig(scan_cap=4096, out_cap=8192, probe_cap=16, row_cap=64)
+CAPS = Caps(scan_cap=4096, out_cap=8192, probe_cap=16, row_cap=64)
 
 
 def random_graph(rng, n=300, subjects=40, preds=5, objects=40):
@@ -34,12 +34,11 @@ QUERIES = {
 }
 
 
-def check(tr, pats, mode, multiway, cfg=CFG):
-    import dataclasses
+def check(tr, pats, mode, multiway, caps=CAPS):
     store = build_store(tr, num_shards=1)
     want, ovars = execute_oracle(tr, pats)
-    c = dataclasses.replace(cfg, multiway=multiway)
-    bnd = execute_local(store, pats, mode=mode, cfg=c)
+    plan = compile_plan(store, pats, caps, mode=mode, multiway=multiway)
+    bnd = execute_local(store, plan)
     got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
     if tuple(bnd.vars) != ovars:
         perm = [bnd.vars.index(v) for v in ovars]
@@ -68,9 +67,9 @@ def test_skewed_fat_rows(rng):
 
 def test_overflow_is_surfaced(rng):
     tr = random_graph(rng, n=500)
-    cfg = ExecConfig(scan_cap=4096, out_cap=8, probe_cap=2, row_cap=4)
+    caps = Caps(scan_cap=4096, out_cap=8, probe_cap=2, row_cap=4)
     store = build_store(tr, 1)
-    bnd = execute_local(store, QUERIES["chain2"], "mapsin", cfg)
+    bnd = execute_local(store, QUERIES["chain2"], "mapsin", caps=caps)
     want, _ = execute_oracle(tr, QUERIES["chain2"])
     if len(want) > 8:
         assert int(bnd.overflow) > 0  # drops are counted, never silent
@@ -97,10 +96,9 @@ def test_property_multiway_equals_cascade(seed):
     rng = np.random.RandomState(seed)
     tr = random_graph(rng)
     store = build_store(tr, 1)
-    import dataclasses
     pats = QUERIES["star3"]
-    a = execute_local(store, pats, "mapsin", dataclasses.replace(CFG, multiway=True))
-    b = execute_local(store, pats, "mapsin", dataclasses.replace(CFG, multiway=False))
+    a = execute_local(store, compile_plan(store, pats, CAPS, multiway=True))
+    b = execute_local(store, compile_plan(store, pats, CAPS, multiway=False))
     ra = rows_set(a.table, a.valid, len(a.vars))
     rb = rows_set(b.table, b.valid, len(b.vars))
     if a.vars != b.vars:

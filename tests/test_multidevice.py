@@ -28,8 +28,8 @@ def test_sharded_join_vs_oracle():
     res = run_in_subprocess(textwrap.dedent("""
         import json, numpy as np, jax
         from jax.sharding import Mesh
-        from repro.core import (Pattern, build_store, execute_sharded,
-                                execute_oracle, rows_set, ExecConfig)
+        from repro.core import (Caps, Pattern, build_store, execute_sharded,
+                                execute_oracle, rows_set)
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
         rng = np.random.RandomState(3)
         tr = np.stack([rng.randint(0, 60, 600), rng.randint(100, 105, 600),
@@ -39,8 +39,9 @@ def test_sharded_join_vs_oracle():
         want, ovars = execute_oracle(tr, pats)
         ok = True
         for mode in ("mapsin", "reduce"):
-            cfg = ExecConfig(out_cap=2048, probe_cap=32, bucket_cap=1024)
-            t, v, ovf, vars_ = execute_sharded(store, pats, mesh, mode, cfg)
+            caps = Caps(out_cap=2048, probe_cap=32, bucket_cap=1024)
+            t, v, ovf, vars_ = execute_sharded(store, pats, mesh, mode,
+                                               caps=caps)
             got = rows_set(t, v, len(vars_))
             if vars_ != ovars:
                 perm = [vars_.index(x) for x in ovars]
@@ -60,8 +61,8 @@ def test_sharded_a2a_matches_broadcast():
     res = run_in_subprocess(textwrap.dedent("""
         import json, numpy as np, jax
         from jax.sharding import Mesh
-        from repro.core import (Pattern, build_store, execute_sharded,
-                                execute_oracle, rows_set, ExecConfig)
+        from repro.core import (Caps, ExecConfig, Pattern, build_store,
+                                execute_sharded, execute_oracle, rows_set)
         from repro.core.rdf import BITS, pack3
         from repro.core.triple_store import range_intersects_region
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
@@ -89,10 +90,12 @@ def test_sharded_a2a_matches_broadcast():
             want, ovars = execute_oracle(tr, pats)
             got = {}
             for routing in ("broadcast", "a2a"):
-                cfg = ExecConfig(out_cap=1 << 13, probe_cap=512, row_cap=512,
-                                 bucket_cap=1024, routing=routing)
+                caps = Caps(out_cap=1 << 13, probe_cap=512, row_cap=512,
+                            bucket_cap=1024)
                 t, v, ovf, vars_ = execute_sharded(store, pats, mesh,
-                                                   "mapsin", cfg)
+                                                   "mapsin",
+                                                   ExecConfig(routing=routing),
+                                                   caps=caps)
                 perm = [vars_.index(x) for x in ovars]
                 got[routing] = {tuple(r[i] for i in perm)
                                 for r in rows_set(t, v, len(vars_))}
@@ -115,7 +118,7 @@ def test_sharded_batched_serving_matches_local():
     res = run_in_subprocess(textwrap.dedent("""
         import json, numpy as np, jax
         from jax.sharding import Mesh
-        from repro.core import (ExecConfig, Pattern, build_store,
+        from repro.core import (Caps, ExecConfig, Pattern, build_store,
                                 execute_local, rows_set)
         from repro.serve import ServeEngine
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
@@ -123,9 +126,9 @@ def test_sharded_batched_serving_matches_local():
         tr = np.stack([rng.randint(0, 60, 800), rng.randint(100, 105, 800),
                        rng.randint(0, 60, 800)], 1).astype(np.int32)
         store = build_store(tr, num_shards=8)
-        cfg = ExecConfig(out_cap=2048, probe_cap=64, row_cap=64,
-                         routing="a2a", a2a_bucket_cap=0)
-        eng = ServeEngine(store, cfg=cfg, mesh=mesh, max_batch=8)
+        cfg = ExecConfig(routing="a2a")
+        caps = Caps(out_cap=2048, probe_cap=64, row_cap=64)
+        eng = ServeEngine(store, cfg=cfg, caps=caps, mesh=mesh, max_batch=8)
         queries = []
         for c in (1, 5, 9, 13, 17, 21):           # join template
             queries.append([Pattern("?x", 101, c), Pattern("?x", 102, "?y")])
@@ -138,7 +141,7 @@ def test_sharded_batched_serving_matches_local():
         store1 = build_store(tr, 1)
         ok, n = True, 0
         for pats, r in zip(queries, results):
-            bnd = execute_local(store1, pats, "mapsin", cfg)
+            bnd = execute_local(store1, pats, "mapsin", caps=caps)
             want = rows_set(bnd.table, bnd.valid, len(bnd.vars))
             ok = ok and r.rows_set(tuple(bnd.vars)) == want
             ok = ok and r.overflow == 0

@@ -1,0 +1,268 @@
+"""Planner IR tests (DESIGN.md §6): cost-based plans must be row-identical
+to heuristic plans, to the legacy execute_local path, and to the oracle on
+EVERY benchmark query; explain() renders order/operators/caps/cost; the
+reduce_side fallback fires exactly when mapsin cannot answer within the
+cap budget; quantize_cap holds the shared grid."""
+import numpy as np
+import pytest
+
+from repro.core import (Caps, Pattern, build_store, compile_plan,
+                        execute_local, execute_oracle, explain, quantize_cap,
+                        rows_set)
+from repro.core.planner import ENGINE_OPERATORS, LogicalPlan, relation_stats
+from repro.data import lubm_like, sp2b_like
+
+CAPS = Caps(scan_cap=1 << 15, out_cap=1 << 15, probe_cap=256, row_cap=64)
+
+
+def _rows(store, bnd, ovars):
+    got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+    if tuple(bnd.vars) != tuple(ovars):
+        perm = [bnd.vars.index(v) for v in ovars]
+        got = set(tuple(r[i] for i in perm) for r in got)
+    return got
+
+
+@pytest.fixture(scope="module")
+def lubm():
+    return lubm_like(1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sp2b():
+    return sp2b_like(400, seed=0)
+
+
+def _check_cost_vs_heuristic(tr, pats):
+    store = build_store(tr, 1)
+    want, ovars = execute_oracle(tr, pats)
+    plan_c = compile_plan(store, pats, CAPS, ordering="cost")
+    plan_h = compile_plan(store, pats, CAPS, ordering="heuristic")
+    assert plan_c.ordering == "cost" and plan_h.ordering == "heuristic"
+    got_c = _rows(store, execute_local(store, plan_c), ovars)
+    got_h = _rows(store, execute_local(store, plan_h), ovars)
+    legacy = _rows(store, execute_local(store, pats, "mapsin", caps=CAPS),
+                   ovars)
+    assert got_c == got_h == legacy == want
+    return plan_c
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("qname", ["Q1", "Q3", "Q4", "Q5", "Q6", "Q7", "Q8",
+                                   "Q11", "Q13", "Q14"])
+def test_lubm_cost_plans_row_identical(lubm, qname):
+    tr, d, queries = lubm
+    _check_cost_vs_heuristic(tr, queries[qname])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("qname", ["Q1", "Q2", "Q3a", "Q10"])
+def test_sp2b_cost_plans_row_identical(sp2b, qname):
+    tr, d, queries = sp2b
+    _check_cost_vs_heuristic(tr, queries[qname])
+
+
+def test_cost_plans_row_identical_small(lubm):
+    """Fast-tier cover: two representative queries (a star and the Q8
+    chain the old probe_cap=16 bug lived in)."""
+    tr, d, queries = lubm
+    for q in ("Q4", "Q8"):
+        _check_cost_vs_heuristic(tr, queries[q])
+
+
+# ---------------------------------------------------------------------------
+# explain()
+# ---------------------------------------------------------------------------
+
+
+def test_explain_golden():
+    tr = np.array([[1, 10, 2], [1, 10, 3], [2, 11, 4], [3, 11, 4],
+                   [5, 10, 2]], np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 10, 2), Pattern("?x", 11, "?y")]
+    caps = Caps(scan_cap=64, out_cap=64, probe_cap=8, row_cap=8)
+    plan = compile_plan(store, pats, caps)
+    want = """\
+PhysicalPlan: 2 steps, ordering=cost, est_cost=6, vars=(?x, ?y)
+  [0] scan        {?x <10> <2>}  est_out=2  caps: out=64
+  [1] mapsin      {?x <11> ?y}  est_in=2 est_out=2 fanout_max=1  caps: probe=8 out=64 a2a=0"""
+    assert explain(plan) == want
+
+
+def test_explain_reports_overflow(lubm):
+    """Satellite: undersized caps are REPORTED per step (the Q8
+    probe_cap=16 class of bug), never silently dropped."""
+    tr, d, queries = lubm
+    store = build_store(tr, 1)
+    tiny = Caps(scan_cap=1 << 15, out_cap=1 << 13, probe_cap=16, row_cap=64)
+    # restrict to mapsin so the fallback cannot rescue the truncation
+    plan = compile_plan(store, queries["Q8"], tiny,
+                        operators=ENGINE_OPERATORS)
+    stats: list = []
+    bnd = execute_local(store, plan, stats=stats)
+    assert int(np.asarray(bnd.overflow)) > 0
+    text = explain(plan, stats=stats)
+    assert "overflow=" in text and "rows dropped by capacity" in text
+    per_step = [st["overflow"] for st in stats]
+    assert sum(per_step) == int(np.asarray(bnd.overflow))
+    assert any(o > 0 for o in per_step)
+
+
+def test_explain_decodes_terms(lubm):
+    tr, d, queries = lubm
+    store = build_store(tr, 1)
+    plan = compile_plan(store, queries["Q5"], CAPS)
+    text = explain(plan, decode=d.term)
+    assert "<Dept0.U0>" in text and "<Student>" in text
+
+
+# ---------------------------------------------------------------------------
+# reduce_side fallback
+# ---------------------------------------------------------------------------
+
+
+def test_reduce_side_fallback_on_residual_only_join(rng):
+    """A join variable bindable only in a residual (predicate) position:
+    the index GET degenerates to a full-range scan truncated at
+    probe_cap, so the planner must select reduce_side — and be exact
+    where the forced-mapsin plan drops rows."""
+    tr = np.stack([rng.randint(0, 30, 400), rng.randint(100, 110, 400),
+                   rng.randint(0, 30, 400)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern(3, "?p", "?o"), Pattern("?x", "?p", "?y")]
+    caps = Caps(scan_cap=4096, out_cap=1 << 14, probe_cap=8, row_cap=8)
+    plan = compile_plan(store, pats, caps)
+    kinds = [st.kind for st in plan.steps]
+    assert "reduce_side" in kinds, kinds
+    want, ovars = execute_oracle(tr, pats)
+    got = _rows(store, execute_local(store, plan), ovars)
+    assert got == want and len(want) > 0
+    # the forced-mapsin plan truncates (and surfaces it as overflow)
+    forced = compile_plan(store, pats, caps, operators=ENGINE_OPERATORS)
+    bnd = execute_local(store, forced)
+    assert _rows(store, bnd, ovars) != want
+    assert int(np.asarray(bnd.overflow)) > 0
+
+
+def test_reduce_side_fallback_on_blown_probe_cap(rng):
+    """Fan-out beyond probe_cap (the rdf:type hub): the planner switches
+    the step to reduce_side with a right-sized sort-merge budget instead
+    of silently truncating the GET."""
+    hub = np.stack([np.arange(16), np.full(16, 101),
+                    np.full(16, 7)], 1).astype(np.int32)
+    spokes = np.stack([np.arange(64) % 16, np.full(64, 102),
+                       np.arange(64) // 16], 1).astype(np.int32)
+    tr = np.concatenate([hub, spokes])
+    store = build_store(tr, 1)
+    # probed pattern (?y 102 ?z) has fan-out 4 per subject; shrink the
+    # budget below it
+    pats = [Pattern("?x", 101, 7), Pattern("?x", 102, "?z")]
+    caps = Caps(scan_cap=4096, out_cap=1 << 14, probe_cap=2, row_cap=2)
+    plan = compile_plan(store, pats, caps)
+    join = [st for st in plan.steps if st.kind != "scan"]
+    assert join and join[0].kind == "reduce_side"
+    assert join[0].caps.probe_cap >= 4          # raised to the measured max
+    want, ovars = execute_oracle(tr, pats)
+    got = _rows(store, execute_local(store, plan), ovars)
+    assert got == want
+    assert int(np.asarray(execute_local(store, plan).overflow)) == 0
+
+
+# ---------------------------------------------------------------------------
+# quantize_cap (the one shared grid helper)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_cap_grid_boundaries():
+    # floor of the grid
+    assert quantize_cap(-3) == quantize_cap(0) == quantize_cap(8) == 8
+    # exact grid points are fixed points
+    for v in (8, 12, 16, 24, 32, 48, 64, 96, 128):
+        assert quantize_cap(v) == v
+    # one past a grid point lands on the next one
+    assert quantize_cap(9) == 12
+    assert quantize_cap(13) == 16
+    assert quantize_cap(17) == 24
+    assert quantize_cap(25) == 32
+    assert quantize_cap(33) == 48
+    assert quantize_cap(49) == 64
+    # never undershoots, bounded overshoot (< 50%: consecutive grid
+    # points are at most a 3/2 ratio apart)
+    for v in range(1, 2000):
+        q = quantize_cap(v)
+        assert q >= v or v <= 8
+        assert q <= max(v, 8) * 3 / 2
+
+
+def test_logical_plan_input():
+    tr = np.array([[1, 10, 2], [2, 11, 3]], np.int32)
+    store = build_store(tr, 1)
+    lp = LogicalPlan((Pattern("?x", 10, "?y"),))
+    plan = compile_plan(store, lp, CAPS)
+    assert plan.steps[0].kind == "scan"
+    # relation_stats memoizes (second call hits the cache)
+    s1 = relation_stats(store, Pattern("?x", 10, "?y"), ())
+    s2 = relation_stats(store, Pattern("?x", 10, "?y"), ())
+    assert s1 == s2 == (1, 1, 1)
+
+
+def test_reduce_side_budget_covers_single_key_window():
+    """The sort-merge windows on ONE join-key column (extra shared vars
+    filter after the window), so the fallback budget must cover the max
+    group per join-key VALUE — not the smaller max group over all bound
+    positions (parallel-edge graphs expose the difference)."""
+    rows = []
+    for i in range(20):                     # hub x=0: 20 targets x 2 preds
+        rows += [(0, 200, 100 + i), (0, 201, 100 + i)]
+    for i in range(10):                     # background
+        rows += [(1 + i, 200, 100 + i)]
+    edges = [(0, 100, 100 + i) for i in range(20)] + \
+            [(1 + i, 100, 100 + i) for i in range(10)]
+    tr = np.array(edges + rows, np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 100, "?y"), Pattern("?x", "?p", "?y")]
+    caps = Caps(scan_cap=4096, out_cap=1 << 14, probe_cap=1, row_cap=1)
+    plan = compile_plan(store, pats, caps)
+    join = [st for st in plan.steps if st.kind != "scan"]
+    assert join and join[0].kind == "reduce_side"
+    # budget >= the hub's 40-row window on the join key (?x), not the
+    # 2-row max group over the (x, y) pair
+    assert join[0].caps.probe_cap >= 40
+    want, ovars = execute_oracle(tr, pats)
+    bnd = execute_local(store, plan)
+    assert _rows(store, bnd, ovars) == want and len(want) > 0
+    assert int(np.asarray(bnd.overflow)) == 0
+
+
+def test_plan_mode_and_route_shards_are_not_silently_dropped(rng):
+    """Executor args that a compiled plan would otherwise swallow: a
+    'reduce' baseline request on a mapsin plan is an error; an explicit
+    route_shards overrides the plan's baked-in measurement size."""
+    import pytest
+    tr = np.stack([rng.randint(0, 30, 300), rng.randint(100, 104, 300),
+                   rng.randint(0, 30, 300)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
+    plan = compile_plan(store, pats, CAPS)          # route_shards=10
+    with pytest.raises(ValueError):
+        execute_local(store, plan, "reduce")
+    stats: list = []
+    execute_local(store, plan, stats=stats, route_shards=4)
+    joins = [st for st in stats if st["kind"] != "scan"]
+    assert joins and all(st["route_shards"] == 4 for st in joins)
+
+
+def test_traffic_actual_prices_reduce_side_steps_as_reduce():
+    """A hybrid plan's reduce_side step must be priced as a shuffle +
+    full relation scan even under the mapsin comparison modes — zero
+    probe bytes would flatter any plan containing one."""
+    from repro.core.bgp import query_traffic_actual
+    stats = [{"kind": "scan", "n_in": 0, "n_out": 10, "nv": 1,
+              "relation": 10, "n_patterns": 1},
+             {"kind": "reduce_side", "n_in": 10, "n_out": 40, "nv": 1,
+              "relation": 50, "n_patterns": 1, "deliveries": 0,
+              "route_shards": 4}]
+    out = query_traffic_actual(stats, "mapsin_routed", 4, n_triples=1000)
+    # shuffle Omega (10 rows x 8 B) + relation (50 x 16 B) + full scan
+    assert out["network"] == 10 * (1 * 4 + 4) + 50 * 16
+    assert out["scanned"] >= 1000 * 8

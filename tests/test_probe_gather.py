@@ -161,10 +161,12 @@ def test_full_engine_pallas_interpret_vs_oracle():
                    rng.randint(0, 20, 250)], 1).astype(np.int32)
     store = build_store(tr, 1)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    cfg = ExecConfig(scan_cap=2048, out_cap=4096, probe_cap=32,
-                     impl="pallas_interpret", multiway=False)
+    from repro.core import Caps, compile_plan
+    caps = Caps(scan_cap=2048, out_cap=4096, probe_cap=32)
+    cfg = ExecConfig(impl="pallas_interpret")
     want, ovars = execute_oracle(tr, pats)
-    bnd = execute_local(store, pats, "mapsin", cfg)
+    plan = compile_plan(store, pats, caps, multiway=False)
+    bnd = execute_local(store, plan, cfg=cfg)
     got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
     if tuple(bnd.vars) != ovars:
         perm = [bnd.vars.index(v) for v in ovars]

@@ -8,12 +8,12 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (ExecConfig, Pattern, build_store, execute_local,
-                        execute_oracle, rows_set)
+from repro.core import (Caps, ExecConfig, Pattern, build_store,
+                        execute_local, execute_oracle, rows_set)
 from repro.data.rdf_gen import LUBM_SPARQL, lubm_like
 from repro.serve import EngineBusy, ServeEngine, plan_signature
 
-CFG = ExecConfig(scan_cap=4096, out_cap=4096, probe_cap=16, row_cap=64)
+CAPS = Caps(scan_cap=4096, out_cap=4096, probe_cap=16, row_cap=64)
 
 
 def random_graph(rng, n=300, subjects=40, preds=5, objects=40):
@@ -23,7 +23,7 @@ def random_graph(rng, n=300, subjects=40, preds=5, objects=40):
 
 
 def _local_set(store, pats, vars_want):
-    bnd = execute_local(store, pats, "mapsin", CFG)
+    bnd = execute_local(store, pats, "mapsin", caps=CAPS)
     got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
     if tuple(bnd.vars) != tuple(vars_want):
         perm = [bnd.vars.index(v) for v in vars_want]
@@ -40,24 +40,24 @@ def test_same_shape_different_constants_share_signature(rng):
     store = build_store(random_graph(rng), 1)
     qa = [Pattern("?x", 101, 7), Pattern("?x", 102, "?y")]
     qb = [Pattern("?s", 101, 9), Pattern("?s", 102, "?t")]  # renamed + new const
-    ta, ca, _ = plan_signature(store, qa, CFG)
-    tb, cb, _ = plan_signature(store, qb, CFG)
+    ta, ca, _ = plan_signature(store, qa, caps=CAPS)
+    tb, cb, _ = plan_signature(store, qb, caps=CAPS)
     assert ta == tb
     assert ca.tolist() != cb.tolist()
 
 
 def test_different_shapes_get_different_signatures(rng):
     store = build_store(random_graph(rng), 1)
-    t1, _, _ = plan_signature(store, [Pattern("?x", 101, 7)], CFG)
+    t1, _, _ = plan_signature(store, [Pattern("?x", 101, 7)], caps=CAPS)
     t2, _, _ = plan_signature(
-        store, [Pattern("?x", 101, 7), Pattern("?x", 102, "?y")], CFG)
+        store, [Pattern("?x", 101, 7), Pattern("?x", 102, "?y")], caps=CAPS)
     assert t1 != t2
 
 
 def test_repeated_constant_shares_a_slot(rng):
     store = build_store(random_graph(rng), 1)
     t, consts, _ = plan_signature(
-        store, [Pattern(3, 101, "?x"), Pattern(3, 102, "?y")], CFG)
+        store, [Pattern(3, 101, "?x"), Pattern(3, 102, "?y")], caps=CAPS)
     # 4 constant occurrences, 3 distinct: the repeated subject shares a slot
     assert t.n_consts == 3 and sorted(consts.tolist()) == [3, 101, 102]
 
@@ -76,7 +76,7 @@ def test_mixed_stream_matches_local_and_oracle(rng):
     for const in (2, 7):                          # a second template
         queries.append([Pattern(const, 103, "?a"), Pattern("?a", 104, "?b")])
     queries.append([Pattern("?x", 100, "?y"), Pattern("?y", 101, "?z")])
-    eng = ServeEngine(store, cfg=CFG, max_batch=8)
+    eng = ServeEngine(store, caps=CAPS, max_batch=8)
     results = eng.execute(queries)
     assert eng.dispatches == 3                    # one per template
     for pats, res in zip(queries, results):
@@ -92,7 +92,7 @@ def test_multiway_star_template_batches(rng):
     queries = [[Pattern("?x", 101, c), Pattern("?x", 102, "?a"),
                 Pattern("?x", 103, "?b"), Pattern("?x", 104, "?c")]
                for c in (0, 3, 6, 11)]
-    eng = ServeEngine(store, cfg=CFG)
+    eng = ServeEngine(store, caps=CAPS)
     results = eng.execute(queries)
     assert eng.dispatches == 1
     for pats, res in zip(queries, results):
@@ -105,7 +105,7 @@ def test_repeated_constant_multiway_group_executes(rng):
     tr = random_graph(rng, n=400)
     store = build_store(tr, 1)
     pats = [Pattern(3, 101, "?x"), Pattern(3, 102, "?y")]
-    eng = ServeEngine(store, cfg=CFG)
+    eng = ServeEngine(store, caps=CAPS)
     res = eng.execute([pats])[0]
     assert res.rows_set() == _local_set(store, pats, res.vars)
     want, ovars = execute_oracle(tr, pats)
@@ -117,14 +117,18 @@ def test_lubm_sparql_stream_end_to_end():
     equal the sequential engine's on identical (patterns, cfg)."""
     tr, d, qs = lubm_like(1)
     store = build_store(tr, 1)
-    cfg = ExecConfig(scan_cap=1 << 15, out_cap=1 << 13, probe_cap=64,
-                     row_cap=64)
-    eng = ServeEngine(store, d, cfg)
+    # probe_cap must hold Q8's memberOf fan-out (120 students/department):
+    # below it the engine's mapsin-only template truncates while
+    # execute_local's planner switches that step to the exact reduce_side
+    # fallback — identical row sets need a non-truncating budget
+    caps = Caps(scan_cap=1 << 15, out_cap=1 << 13, probe_cap=128,
+                row_cap=64)
+    eng = ServeEngine(store, d, caps=caps)
     names = sorted(LUBM_SPARQL)
     results = eng.execute([LUBM_SPARQL[n] for n in names])
     assert eng.dispatches < len(names)            # shapes actually shared
     for n, res in zip(names, results):
-        bnd = execute_local(store, qs[n], "mapsin", cfg)
+        bnd = execute_local(store, qs[n], "mapsin", caps=caps)
         want = rows_set(bnd.table, bnd.valid, len(bnd.vars))
         assert res.rows_set(bnd.vars) == want, n
         assert res.vars == tuple(bnd.vars), n
@@ -134,13 +138,17 @@ def test_lubm_sparql_stream_end_to_end():
 def test_overflow_is_surfaced_per_slot(rng):
     tr = random_graph(rng, n=500)
     store = build_store(tr, 1)
-    tiny = ExecConfig(scan_cap=4096, out_cap=8, probe_cap=2, row_cap=4)
+    tiny = Caps(scan_cap=4096, out_cap=8, probe_cap=2, row_cap=4)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    eng = ServeEngine(store, cfg=tiny)
+    eng = ServeEngine(store, caps=tiny)
     res = eng.execute([pats])[0]
     want, _ = execute_oracle(tr, pats)
     if len(want) > 8:
         assert res.overflow > 0
+        # satellite: the per-step counters localize the drop to a step
+        assert res.stats is not None
+        assert sum(res.stats["overflow_per_step"]) == res.overflow
+        assert len(res.stats["overflow_per_step"]) == len(res.stats["kinds"])
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +158,7 @@ def test_overflow_is_surfaced_per_slot(rng):
 
 def test_admission_control_queue_depth(rng):
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_queue=4)
+    eng = ServeEngine(store, caps=CAPS, max_queue=4)
     pats = [Pattern("?x", 101, 7)]
     for _ in range(4):
         eng.submit(pats)
@@ -162,7 +170,7 @@ def test_admission_control_queue_depth(rng):
 
 def test_per_bucket_max_batch(rng):
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_batch=4, max_queue=64)
+    eng = ServeEngine(store, caps=CAPS, max_batch=4, max_queue=64)
     queries = [[Pattern("?x", 101, c % 13)] for c in range(10)]
     results = eng.execute(queries)
     assert eng.dispatches == 3                    # 4 + 4 + 2 slots
@@ -173,7 +181,7 @@ def test_per_bucket_max_batch(rng):
 
 def test_fullest_bucket_dispatches_first(rng):
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_batch=8)
+    eng = ServeEngine(store, caps=CAPS, max_batch=8)
     a = [Pattern("?x", 101, 3)]                   # 1 request
     b = [Pattern("?x", 101, 5), Pattern("?x", 102, "?y")]  # 3 requests
     eng.submit(a)
@@ -186,7 +194,7 @@ def test_fullest_bucket_dispatches_first(rng):
 
 def test_compile_cache_is_lru_bounded(rng):
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, compile_cache_size=2)
+    eng = ServeEngine(store, caps=CAPS, compile_cache_size=2)
     shapes = [[Pattern("?x", 101, 1)],
               [Pattern("?x", 101, 2), Pattern("?x", 102, "?y")],
               [Pattern("?x", 100, "?y"), Pattern("?y", 103, "?z")]]
@@ -200,8 +208,8 @@ def test_compile_cache_is_lru_bounded(rng):
 def test_engine_rejects_reduce_mode_and_textless_dictionary(rng):
     store = build_store(random_graph(rng), 1)
     with pytest.raises(ValueError):
-        ServeEngine(store, cfg=CFG, mode="reduce")
-    eng = ServeEngine(store, cfg=CFG)             # no dictionary
+        ServeEngine(store, caps=CAPS, mode="reduce")
+    eng = ServeEngine(store, caps=CAPS)             # no dictionary
     with pytest.raises(ValueError):
         eng.submit("SELECT ?x WHERE { ?x a <Student> . }")
 
@@ -211,7 +219,7 @@ def test_min_batch_defers_until_aged(rng):
     override dispatches the oldest request's bucket past max_wait_s, and a
     bucket reaching min_batch dispatches immediately."""
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_batch=8, min_batch=4,
+    eng = ServeEngine(store, caps=CAPS, max_batch=8, min_batch=4,
                       max_wait_s=5.0)
     for c in (1, 2):
         eng.submit([Pattern("?x", 101, c)], arrival=0.0)
@@ -226,7 +234,7 @@ def test_min_batch_defers_until_aged(rng):
 
 def test_drain_forces_dispatch_below_min_batch(rng):
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_batch=8, min_batch=8,
+    eng = ServeEngine(store, caps=CAPS, max_batch=8, min_batch=8,
                       max_wait_s=1e9)
     pats = [Pattern("?x", 101, 3)]
     eng.submit(pats, arrival=0.0)
@@ -235,18 +243,19 @@ def test_drain_forces_dispatch_below_min_batch(rng):
     assert len(res) == 1
     assert res[0].rows_set() == _local_set(store, pats, res[0].vars)
     with pytest.raises(ValueError):               # malformed policy
-        ServeEngine(store, cfg=CFG, max_batch=4, min_batch=8)
+        ServeEngine(store, caps=CAPS, max_batch=4, min_batch=8)
 
 
 def test_compile_cache_key_includes_config(rng):
-    """Toggling the engine's ExecConfig must never reuse a compiled
-    cascade built for the old config (the key carries the full config)."""
+    """Toggling the engine's capacity budget must never reuse a compiled
+    cascade built for the old caps (the key carries config AND caps)."""
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG)
+    eng = ServeEngine(store, caps=CAPS)
     pats = [Pattern("?x", 101, 7), Pattern("?x", 102, "?y")]
     eng.execute([pats])
     assert len(eng._compiled) == 1
-    eng.cfg = dataclasses.replace(CFG, probe_cap=max(CFG.probe_cap // 2, 2))
+    eng.caps = dataclasses.replace(CAPS,
+                                   probe_cap=max(CAPS.probe_cap // 2, 2))
     res = eng.execute([pats])[0]
     assert len(eng._compiled) == 2                # distinct entry, no reuse
     assert res.rows_set() == _local_set(store, pats, res.vars)
@@ -262,8 +271,8 @@ def test_sharded_engine_degenerate_mesh_a2a(rng):
     tr = random_graph(rng, n=400)
     store = build_store(tr, 1)
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    cfg = dataclasses.replace(CFG, routing="a2a", a2a_bucket_cap=0)
-    eng = ServeEngine(store, cfg=cfg, mesh=mesh, max_batch=8)
+    cfg = ExecConfig(routing="a2a")
+    eng = ServeEngine(store, cfg=cfg, caps=CAPS, mesh=mesh, max_batch=8)
     queries = [[Pattern("?x", 101, c), Pattern("?x", 102, "?y")]
                for c in (1, 5, 9, 13)]
     queries.append([Pattern("?x", 101, 3), Pattern("?x", 102, "?a"),
@@ -275,14 +284,14 @@ def test_sharded_engine_degenerate_mesh_a2a(rng):
         assert res.overflow == 0
     # mesh size must match the store's sharding
     with pytest.raises(ValueError):
-        ServeEngine(build_store(tr, 2), cfg=cfg, mesh=mesh)
+        ServeEngine(build_store(tr, 2), cfg=cfg, caps=CAPS, mesh=mesh)
 
 
 def test_minority_template_is_not_starved(rng):
     """Aging: a steady majority template must not starve a minority
     request past starvation_limit dispatches."""
     store = build_store(random_graph(rng), 1)
-    eng = ServeEngine(store, cfg=CFG, max_batch=4, max_queue=256,
+    eng = ServeEngine(store, caps=CAPS, max_batch=4, max_queue=256,
                       starvation_limit=2)
     minority = [Pattern("?x", 100, "?y"), Pattern("?y", 103, "?z")]
     rid_min = eng.submit(minority)
@@ -296,3 +305,32 @@ def test_minority_template_is_not_starved(rng):
             served_at = i
             break
     assert served_at is not None and served_at <= 2
+
+
+def test_submit_accepts_physical_plan(rng):
+    """API redesign: all three executors consume a PhysicalPlan — a
+    pre-compiled plan goes straight into submit; plans with operators
+    the template cascade cannot express are rejected at the front door."""
+    from repro.core import Caps, compile_plan
+    from repro.core.planner import ENGINE_OPERATORS
+    tr = random_graph(rng, n=400)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 101, 5), Pattern("?x", 102, "?y")]
+    plan = compile_plan(store, pats, CAPS, operators=ENGINE_OPERATORS)
+    eng = ServeEngine(store, caps=CAPS)
+    res = eng.execute([plan])[0]
+    assert res.rows_set() == _local_set(store, pats, res.vars)
+    # a reduce_side plan cannot ride the seeded template cascade
+    bad = compile_plan(store, [Pattern(3, "?p", "?o"),
+                               Pattern("?x", "?p", "?y")],
+                       Caps(probe_cap=2))
+    if any(st.kind == "reduce_side" for st in bad.steps):
+        with pytest.raises(ValueError):
+            eng.submit(bad)
+    # a plan compiled with a LARGER budget than the engine's would
+    # silently truncate more than its own caps promise — front-door error
+    big = compile_plan(store, pats,
+                       dataclasses.replace(CAPS, out_cap=CAPS.out_cap * 2),
+                       operators=ENGINE_OPERATORS)
+    with pytest.raises(ValueError):
+        eng.submit(big)

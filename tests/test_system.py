@@ -5,25 +5,23 @@ through BOTH engines (MAPSIN + reduce-side baseline) and checks exact
 agreement with the brute-force oracle, plus the paper's headline claims in
 the traffic model (keys+matches << full relations; multiway saves rounds).
 """
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.core import (ExecConfig, build_store, execute_local,
+from repro.core import (Caps, build_store, compile_plan, execute_local,
                         execute_oracle, query_traffic, rows_set)
 from repro.data import lubm_like, sp2b_like
 
 pytestmark = pytest.mark.slow  # minutes: every query x both engines x oracle
 
 # probe_cap must cover the fattest GET (a department's ~120 members)
-CFG = ExecConfig(scan_cap=1 << 15, out_cap=1 << 15, probe_cap=256, row_cap=64)
+CAPS = Caps(scan_cap=1 << 15, out_cap=1 << 15, probe_cap=256, row_cap=64)
 
 
 def _check_query(tr, pats, mode):
     store = build_store(tr, 1)
     want, ovars = execute_oracle(tr, pats)
-    bnd = execute_local(store, pats, mode=mode, cfg=CFG)
+    bnd = execute_local(store, pats, mode=mode, caps=CAPS)
     got = rows_set(bnd.table, bnd.valid, len(bnd.vars))
     if tuple(bnd.vars) != ovars:
         perm = [bnd.vars.index(v) for v in ovars]
@@ -70,7 +68,7 @@ def test_paper_claim_traffic(lubm):
     store = build_store(tr, 1)
     for qname, min_ratio in (("Q1", 20), ("Q4", 20), ("Q5", 5), ("Q8", 2)):
         stats: list = []
-        execute_local(store, queries[qname], "mapsin", CFG, stats=stats)
+        execute_local(store, queries[qname], "mapsin", caps=CAPS, stats=stats)
         m = query_traffic_actual(stats, "mapsin_routed", 10, store.n_triples)
         r = query_traffic_actual(stats, "reduce", 10, store.n_triples)
         ratio = r["total"] / m["total"]
@@ -82,14 +80,13 @@ def test_paper_claim_multiway(lubm):
     tr, _, queries = lubm
     store = build_store(tr, 1)
     q4 = queries["Q4"]
-    a = execute_local(store, q4, "mapsin", dataclasses.replace(CFG, multiway=True))
-    b = execute_local(store, q4, "mapsin", dataclasses.replace(CFG, multiway=False))
+    a = execute_local(store, compile_plan(store, q4, CAPS, multiway=True))
+    b = execute_local(store, compile_plan(store, q4, CAPS, multiway=False))
     ra = rows_set(a.table, a.valid, len(a.vars))
     rb = rows_set(b.table, b.valid, len(b.vars))
     if a.vars != b.vars:
         perm = [a.vars.index(v) for v in b.vars]
         ra = set(tuple(r[i] for i in perm) for r in ra)
     assert ra == rb and len(ra) > 0
-    from repro.core import plan_steps
-    steps = plan_steps(q4, dataclasses.replace(CFG, multiway=True))
-    assert sum(1 for s in steps if s.kind == "multiway") >= 1
+    plan = compile_plan(store, q4, CAPS, multiway=True)
+    assert sum(1 for s in plan.steps if s.kind == "multiway") >= 1

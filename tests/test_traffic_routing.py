@@ -12,8 +12,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ExecConfig, Pattern, build_store, execute_local,
-                        execute_oracle, execute_sharded)
+from repro.core import (Caps, ExecConfig, Pattern, build_store,
+                        compile_plan, execute_local, execute_oracle,
+                        execute_sharded)
 from repro.core.bgp import query_traffic_actual, rows_set
 from repro.core.distributed import auto_bucket_cap, bucket_rows
 
@@ -73,9 +74,8 @@ def test_measured_stats_feed_routed_accounting():
                    rng.randint(0, 40, 400)], 1).astype(np.int32)
     store = build_store(tr, 1)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    cfg = ExecConfig(route_shards=3)
     stats: list = []
-    execute_local(store, pats, "mapsin", cfg, stats=stats)
+    execute_local(store, pats, "mapsin", stats=stats, route_shards=3)
     joins = [st for st in stats if st["kind"] != "scan"]
     assert joins and all(st["route_shards"] == 3 for st in joins)
     measured = query_traffic_actual(stats, "mapsin_routed", 3,
@@ -139,8 +139,10 @@ def test_sharded_routing_single_device(routing):
                    rng.randint(0, 30, 300)], 1).astype(np.int32)
     store = build_store(tr, num_shards=1)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    cfg = ExecConfig(out_cap=4096, probe_cap=128, routing=routing)
-    t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin", cfg)
+    cfg = ExecConfig(routing=routing)
+    t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin", cfg,
+                                       caps=Caps(out_cap=4096,
+                                                 probe_cap=128))
     got = rows_set(t, v, len(vars_))
     want, ovars = execute_oracle(tr, pats)
     perm = [vars_.index(x) for x in ovars]
@@ -177,9 +179,12 @@ def test_sharded_a2a_matches_broadcast_2dev():
         want, ovars = execute_oracle(tr, pats)
         got = {}
         for routing in ("broadcast", "a2a"):
-            cfg = ExecConfig(out_cap=1024, probe_cap=64, routing=routing)
+            from repro.core import Caps
+            cfg = ExecConfig(routing=routing)
             t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin",
-                                               cfg)
+                                               cfg,
+                                               caps=Caps(out_cap=1024,
+                                                         probe_cap=64))
             perm = [vars_.index(x) for x in ovars]
             got[routing] = {tuple(r[i] for i in perm)
                             for r in rows_set(t, v, len(vars_))}
@@ -205,47 +210,49 @@ def test_dist_probe_rejects_unknown_routing():
 
 
 # ---------------------------------------------------------------------------
-# measured a2a_bucket_cap auto-tune (ROADMAP open item)
+# measured a2a capacity EMBEDDING (planner.embed_a2a_caps — the planner
+# subsumed tune_a2a_bucket_cap / tuned_step_answer_caps / _maybe_tune)
 # ---------------------------------------------------------------------------
 
 
-def test_tune_a2a_bucket_cap_uses_measured_max_region_load():
-    from repro.core.bgp import tune_a2a_bucket_cap
+def _join_caps(plan):
+    return [st.caps for st in plan.steps[1:]
+            if st.kind in ("mapsin", "multiway")]
+
+
+def test_embedded_a2a_caps_use_measured_max_region_load():
     rng = np.random.RandomState(0)
     tr = np.stack([rng.randint(0, 40, 400), rng.randint(100, 104, 400),
                    rng.randint(0, 40, 400)], 1).astype(np.int32)
     store = build_store(tr, 1)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    cfg = ExecConfig(out_cap=4096, probe_cap=64)
-    cap = tune_a2a_bucket_cap(store, pats, cfg, num_shards=4)
+    caps = Caps(out_cap=4096, probe_cap=64)
+    plan = compile_plan(store, pats, caps, routing="a2a", num_shards=4)
+    jc = _join_caps(plan)
+    assert jc, "plan must have a2a-capable join steps"
     stats: list = []
-    execute_local(store, pats, "mapsin", ExecConfig(out_cap=4096,
-                  probe_cap=64, route_shards=4), stats=stats)
+    execute_local(store, pats, "mapsin", caps=caps, stats=stats,
+                  route_shards=4)
     want = max(st["deliveries_max_region"] for st in stats
                if st["kind"] != "scan")
-    assert cap == max(want, 8)
-    assert cap <= cfg.out_cap
+    assert all(c.a2a_bucket_cap == max(want, 8) for c in jc)
+    assert all(c.a2a_bucket_cap <= caps.out_cap for c in jc)
     # selective query: measured cap beats the static 2x-uniform share
-    assert cap < auto_bucket_cap(cfg.out_cap, 4)
-    # cached: second call hits the plan cache (same object semantics)
-    assert tune_a2a_bucket_cap(store, pats, cfg, num_shards=4) == cap
-    assert ("a2a_tune", tuple(pats), cfg, 4) in store.plan_cache
+    assert jc[0].a2a_bucket_cap < auto_bucket_cap(caps.out_cap, 4)
+    # the answer leg is right-sized to the measured max range length,
+    # never looser than the configured probe cap
+    measured_len = max(st["probe_len_max"] for st in stats
+                       if st["kind"] != "scan")
+    assert all(c.probe_cap <= caps.probe_cap for c in jc)
+    assert all(c.probe_cap >= min(measured_len, caps.probe_cap) for c in jc)
+    # cached: recompiling returns the identical embedded plan
+    plan2 = compile_plan(store, pats, caps, routing="a2a", num_shards=4)
+    assert plan2 == plan
+    assert any(k[0] == "a2a_embed" for k in store.plan_cache)
 
 
-def test_tune_a2a_bucket_cap_fallback_is_out_cap():
-    from repro.core.bgp import tune_a2a_bucket_cap
-    rng = np.random.RandomState(1)
-    tr = np.stack([rng.randint(0, 20, 100), rng.randint(100, 103, 100),
-                   rng.randint(0, 20, 100)], 1).astype(np.int32)
-    store = build_store(tr, 1)
-    cfg = ExecConfig(out_cap=512)
-    # single-pattern scan: no join step ever probes -> drop-free fallback
-    assert tune_a2a_bucket_cap(store, [Pattern("?x", 101, "?y")], cfg,
-                               num_shards=4) == cfg.out_cap
-
-
-def test_sharded_a2a_auto_tunes_and_stays_exact():
-    """execute_sharded with a2a_bucket_cap=0 must tune from measurement
+def test_sharded_a2a_auto_embeds_and_stays_exact():
+    """execute_sharded with caps.a2a_bucket_cap=0 must embed measured caps
     (plan-cache entry appears) and still match the oracle exactly."""
     from jax.sharding import Mesh
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -254,9 +261,11 @@ def test_sharded_a2a_auto_tunes_and_stays_exact():
                    rng.randint(0, 30, 300)], 1).astype(np.int32)
     store = build_store(tr, num_shards=1)
     pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
-    cfg = ExecConfig(out_cap=4096, probe_cap=128, routing="a2a")
-    t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin", cfg)
-    assert any(k[0] == "a2a_tune" for k in store.plan_cache)
+    cfg = ExecConfig(routing="a2a")
+    t, v, ovf, vars_ = execute_sharded(store, pats, mesh, "mapsin", cfg,
+                                       caps=Caps(out_cap=4096,
+                                                 probe_cap=128))
+    assert any(k[0] == "a2a_embed" for k in store.plan_cache)
     got = rows_set(t, v, len(vars_))
     want, ovars = execute_oracle(tr, pats)
     perm = [vars_.index(x) for x in ovars]
@@ -264,14 +273,47 @@ def test_sharded_a2a_auto_tunes_and_stays_exact():
     assert int(np.asarray(ovf).sum()) == 0
 
 
-def test_tune_a2a_bucket_cap_overflow_falls_back_to_out_cap():
-    """A truncated tuning run measures a truncated probe set; the sharded
-    run keeps out_cap rows PER SHARD, so the tuner must not trust it."""
-    from repro.core.bgp import tune_a2a_bucket_cap
+def test_embedded_a2a_caps_overflow_falls_back_to_out_cap():
+    """A truncated measurement run sees a truncated probe set; the sharded
+    run keeps out_cap rows PER SHARD, so the embedding must not trust it."""
     rng = np.random.RandomState(3)
     tr = np.stack([rng.randint(0, 30, 600), rng.randint(100, 102, 600),
                    rng.randint(0, 30, 600)], 1).astype(np.int32)
     store = build_store(tr, 1)
     pats = [Pattern("?x", 100, "?y"), Pattern("?y", 101, "?z")]
-    tiny = ExecConfig(out_cap=16, probe_cap=2)   # guaranteed truncation
-    assert tune_a2a_bucket_cap(store, pats, tiny, num_shards=4) == 16
+    tiny = Caps(out_cap=16, probe_cap=2)         # guaranteed truncation
+    plan = compile_plan(store, pats, tiny, routing="a2a", num_shards=4,
+                        operators=("scan", "mapsin", "multiway"))
+    jc = _join_caps(plan)
+    assert jc and all(c.a2a_bucket_cap == 16 for c in jc)
+    # overflowed measurement: answer caps stay at the configured budget
+    assert all(c.probe_cap == tiny.probe_cap for c in jc)
+
+
+def test_precompiled_plan_embed_uses_plan_budget():
+    """A pre-compiled plan arriving at execute_sharded without embedded
+    a2a caps must size its drop-free bucket fallback from the plan's OWN
+    out_cap, not from an unrelated default budget."""
+    from jax.sharding import Mesh
+    from repro.core.planner import embed_a2a_caps
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    rng = np.random.RandomState(4)
+    tr = np.stack([rng.randint(0, 30, 300), rng.randint(100, 104, 300),
+                   rng.randint(0, 30, 300)], 1).astype(np.int32)
+    store = build_store(tr, 1)
+    pats = [Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]
+    big = Caps(out_cap=1 << 16, probe_cap=128)   # > the default Caps budget
+    plan = compile_plan(store, pats, big)        # no num_shards: unembedded
+    assert all(st.caps.a2a_bucket_cap == 0 for st in plan.steps)
+    # caps=None: the bound comes off the plan's steps (here out_cap 2^16)
+    emb = embed_a2a_caps(store, plan, None, 4)
+    jc = [st.caps for st in emb.steps[1:] if st.kind in ("mapsin",
+                                                         "multiway")]
+    assert jc and all(0 < c.a2a_bucket_cap <= big.out_cap for c in jc)
+    # end to end through execute_sharded with a pre-compiled plan
+    t, v, ovf, vars_ = execute_sharded(store, plan, mesh, "mapsin",
+                                       ExecConfig(routing="a2a"))
+    want, ovars = execute_oracle(tr, pats)
+    perm = [vars_.index(x) for x in ovars]
+    got = {tuple(r[i] for i in perm) for r in rows_set(t, v, len(vars_))}
+    assert got == want and int(np.asarray(ovf).sum()) == 0
