@@ -22,7 +22,7 @@ import sys
 CHANGE_THRESHOLD = 0.05          # 5% relative move is worth a line
 HEADLINE = ("speedup", "qps_batched", "qps_seq", "time_ratio",
             "cold_speedup", "bytes_ratio", "avg_batch", "p99_ms_batched",
-            "probe_ratio", "order_changed")
+            "probe_ratio", "order_changed", "p99_fault_ratio")
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 

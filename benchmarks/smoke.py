@@ -48,6 +48,12 @@ def main() -> int:
         ("serving_sharded", lambda emit: bench_serving.sharded_main(
             emit=emit, num_shards=2, lubm_scale=1, n_requests=6,
             max_batch=4, n_variants=2, shape_names=("lubm_q1", "lubm_q5"))),
+        # chaos canary (PR 6): seeded FaultPlan with one dropped + one
+        # corrupted a2a answer leg on a forced 2-device mesh — asserts
+        # checksum detection, dispatch-retry recovery, and row-identity
+        # vs execute_local (zero wrong rows under chaos)
+        ("serving_chaos", lambda emit: bench_serving.chaos_main(
+            emit=emit, num_shards=2, lubm_scale=1)),
     ]
     failures = []
     for name, fn in suites:

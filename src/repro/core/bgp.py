@@ -174,13 +174,18 @@ def query_traffic(query, mode: str, caps: Caps = Caps(),
 
 
 def _cascade_body(plan: PhysicalPlan, cfg: ExecConfig):
-    """The whole-cascade computation: (keys_spo, keys_ops, scratch) -> Bindings.
+    """The whole-cascade computation:
+    (keys_spo, keys_ops, scratch) -> (Bindings, per-step overflow).
 
     One traced function per (plan, cfg): every step fuses into a single
     XLA computation, so repeated execution pays one dispatch and zero
     per-step host syncs. `scratch` is the zeroed initial Bindings,
     donated on backends that support donation. Each step runs the
     operator the PLANNER chose for it, at the caps the plan embeds.
+    The second output is the (n_steps,) CUMULATIVE overflow counter
+    after each step — a handful of scalars riding the existing dispatch,
+    so overflow-escalation (DESIGN.md §7) can localize a truncation to
+    its step without the instrumented run's per-step host syncs.
     """
     steps = plan.steps
     first = steps[0].patterns[0]
@@ -192,6 +197,7 @@ def _cascade_body(plan: PhysicalPlan, cfg: ExecConfig):
         bnd = ms.scan_pattern(first, keys_of(first, ()),
                               steps[0].caps.out_cap, cfg.impl,
                               scratch=scratch)
+        ovfs = [bnd.overflow]
         for st in steps[1:]:
             c = st.caps
             if st.kind == "multiway":
@@ -207,7 +213,8 @@ def _cascade_body(plan: PhysicalPlan, cfg: ExecConfig):
                     bnd = rs.local_reduce_step(bnd, pat, keys_of(pat, ()),
                                                c.scan_cap, c.probe_cap,
                                                c.out_cap, cfg.impl)
-        return bnd
+            ovfs.append(bnd.overflow)
+        return bnd, jnp.stack(ovfs)
 
     return fn, first_vars
 
@@ -266,7 +273,14 @@ def execute_local(store: TripleStore, query, mode: str = "mapsin",
         return _execute_local_instrumented(store, plan, cfg, stats)
     jitted, first_vars = _compiled_cascade(store, plan, cfg)
     scratch = ms.Bindings.empty(first_vars, plan.steps[0].caps.out_cap)
-    return jitted(store.flat_keys(0), store.flat_keys(1), scratch)
+    bnd, step_ovf = jitted(store.flat_keys(0), store.flat_keys(1), scratch)
+    # cheap unconditional per-step counters (cumulative, one scalar per
+    # step): overflow-escalation can trigger and localize the truncating
+    # step without the instrumented run's host syncs. Attached as a plain
+    # attribute — Bindings' pytree structure (table, valid, overflow) is
+    # unchanged, so every existing consumer is untouched.
+    bnd.step_overflow = step_ovf
+    return bnd
 
 
 def _route_splits(store: TripleStore, index: int, s: int) -> np.ndarray:
@@ -318,6 +332,7 @@ def _execute_local_instrumented(store: TripleStore, plan: PhysicalPlan,
                           keys_of(steps[0].patterns[0], ()),
                           steps[0].caps.out_cap, cfg.impl)
     ovf_prev = int(np.asarray(bnd.overflow))
+    ovf_cum = [ovf_prev]
     stats.append({"kind": "scan", "n_in": 0, "n_out": int(bnd.count()),
                   "nv": len(bnd.vars), "relation": int(bnd.count()),
                   "n_patterns": 1, "overflow": ovf_prev})
@@ -357,7 +372,9 @@ def _execute_local_instrumented(store: TripleStore, plan: PhysicalPlan,
                       "probe_len_max": probe_len,
                       "overflow": ovf_now - ovf_prev})
         ovf_prev = ovf_now
-    return bnd
+        ovf_cum.append(ovf_now)
+    bnd.step_overflow = jnp.asarray(ovf_cum, jnp.int32)  # same contract as
+    return bnd                                           # the jitted path
 
 
 def query_traffic_actual(stats: list, mode: str, num_shards: int,
@@ -429,25 +446,29 @@ def query_traffic_actual(stats: list, mode: str, num_shards: int,
 
 
 def apply_dist_step(bnd: ms.Bindings, st: PlanStep, keys, splits,
-                    cfg: ExecConfig, axis: str,
-                    batched: bool = False) -> ms.Bindings:
+                    cfg: ExecConfig, axis: str, batched: bool = False,
+                    fault=None, with_check: bool = False) -> ms.Bindings:
     """One distributed MAPSIN cascade step (join or multiway star) at the
     step's OWN caps — the shared dispatch behind execute_sharded's
     per-shard body and the serving engine's batched template cascade
     (`batched=True` expects Bindings with a leading query axis and routes
     the whole batch through ONE collective round per step; see
-    core/distributed.py)."""
+    core/distributed.py). `fault`/`with_check` hook the a2a answer-leg
+    integrity machinery (serve/faults.py): with_check returns
+    ``(Bindings, bad)`` and requires the batched a2a path."""
     c = st.caps
+    extra = ({"fault": fault, "with_check": with_check}
+             if batched and (fault is not None or with_check) else {})
     if st.kind == "multiway":
         fn = (dist.batched_dist_multiway_step if batched
               else dist.dist_multiway_step)
         return fn(bnd, st.patterns, keys, c.row_cap, c.out_cap, axis,
                   cfg.impl, shard_splits=splits, routing=cfg.routing,
-                  bucket_cap=c.a2a_bucket_cap)
+                  bucket_cap=c.a2a_bucket_cap, **extra)
     fn = dist.batched_dist_mapsin_step if batched else dist.dist_mapsin_step
     return fn(bnd, st.patterns[0], keys, c.probe_cap, c.out_cap, axis,
               cfg.impl, shard_splits=splits, routing=cfg.routing,
-              bucket_cap=c.a2a_bucket_cap)
+              bucket_cap=c.a2a_bucket_cap, **extra)
 
 
 def mesh_fingerprint(mesh, axis: str) -> tuple:

@@ -94,6 +94,36 @@ def _a2a(x, axis: str):
                               tiled=True)
 
 
+_SALT = 0x9E3779B97F4A7C15 - (1 << 64)        # golden-ratio mix, as int64
+
+
+def _leg_checksum(ans, cnt, miss, answerer):
+    """Salted positional checksum of one shard's outgoing answer blocks.
+
+    ans (S, cap, P) int64, cnt/miss (S, cap) int32 -> (S,) int64, one
+    checksum per destination block. Position-sensitive (odd weights per
+    slot, so swapped or shifted entries change the sum) and salted with
+    the ANSWERER's shard id, so a zeroed block (dropped packets) can
+    never reproduce the checksum of a legitimately empty answer — the
+    origin recomputes with the salt of the shard that block POSITION
+    belongs to. int64 wraparound is two's-complement on both sides, so
+    the comparison stays exact."""
+    s, cap, p = ans.shape
+    w = (2 * jnp.arange(cap * p, dtype=jnp.int64) + 1).reshape(cap, p)
+    wc = 2 * jnp.arange(cap, dtype=jnp.int64) + 1
+    h = (jnp.sum(ans * w[None], axis=(1, 2)) * jnp.int64(1000003)
+         + jnp.sum(cnt.astype(jnp.int64) * wc[None], axis=1) * jnp.int64(8191)
+         + jnp.sum(miss.astype(jnp.int64) * (wc + 7)[None], axis=1))
+    return h + (jnp.asarray(answerer, jnp.int64) + 1) * jnp.int64(_SALT)
+
+
+def _is_member(idx, shards: tuple):
+    """Traced membership of a traced shard index in a static tuple."""
+    if not shards:
+        return jnp.zeros((), bool)
+    return jnp.any(idx == jnp.asarray(shards))
+
+
 def auto_bucket_cap(batch: int, num_shards: int) -> int:
     """Default per-destination probe bucket capacity: 2x the uniform share
     (skew headroom), floored at 32, never beyond `batch` (a shard never
@@ -104,7 +134,7 @@ def auto_bucket_cap(batch: int, num_shards: int) -> int:
 
 def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
                     probe_cap: int, axis: str, impl: str, splits,
-                    bucket_cap: int):
+                    bucket_cap: int, fault=None, with_check: bool = False):
     """Point-to-point routed GET (the paper's region-server RPC).
 
     Four phases, two all_to_all rounds, zero all_gathers:
@@ -143,6 +173,21 @@ def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
     drops the spilled copies and surfaces them in the returned missed
     counts — size `bucket_cap` at the per-destination load (== B for a
     drop-free guarantee).
+
+    Answer-leg integrity (`with_check=True`, DESIGN.md §7): every
+    answering shard ships a salted positional checksum per outgoing
+    answer block on the return leg; the origin recomputes it over what
+    arrived and ZEROES any mismatched block before its keys can enter a
+    result — corrupted or dropped answers can make rows go missing
+    (surfaced via the extra `bad` output, which the serving engine
+    retries on) but never produce a wrong row. `fault` is the chaos
+    hook: a static ``(drop_shards, corrupt_shards)`` pair naming
+    answering shards whose outgoing legs are zeroed (checksum included:
+    lost packets) or value-perturbed AFTER checksumming (wire
+    corruption). With checking on, both are detected and quarantined;
+    faults without checking are the (test-only) way to demonstrate what
+    silent corruption would do. Returns a 4th element ``bad`` — the
+    count of quarantined blocks on this origin shard — iff `with_check`.
     """
     S = _axis_size(axis)
     B = lo.shape[0]
@@ -158,10 +203,39 @@ def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
     k, valid, missed = gather_range(local_keys, rlo, rhi, probe_cap, impl)
     cnt = jnp.sum(valid, axis=-1).astype(jnp.int32)     # prefix length
     ans = jnp.where(valid, k + 1, 0)                    # front-aligned; 0 == empty
+    ans_b = ans.reshape(S, bucket_cap, probe_cap)
+    cnt_b = cnt.reshape(S, bucket_cap)
+    miss_b = missed.reshape(S, bucket_cap)
+    drop_sh, corrupt_sh = fault if fault is not None else ((), ())
+    if with_check or drop_sh or corrupt_sh:
+        me = jax.lax.axis_index(axis)
+        chk = _leg_checksum(ans_b, cnt_b, miss_b, me)   # (S,) per dest block
+        if corrupt_sh:        # wire corruption: perturb AFTER checksumming
+            bad_src = _is_member(me, corrupt_sh)
+            ans_b = jnp.where(bad_src, ans_b + (ans_b > 0), ans_b)
+        if drop_sh:           # lost packets: data AND checksum zeroed
+            lost = _is_member(me, drop_sh)
+            ans_b = jnp.where(lost, 0, ans_b)
+            cnt_b = jnp.where(lost, 0, cnt_b)
+            miss_b = jnp.where(lost, 0, miss_b)
+            chk = jnp.where(lost, 0, chk)
     # --- route raw range entries home (matches-only traffic) ---
-    ANS = _a2a(ans.reshape(S, bucket_cap, probe_cap), axis)
-    CNT = _a2a(cnt.reshape(S, bucket_cap), axis)
-    MISS = _a2a(missed.reshape(S, bucket_cap), axis)
+    ANS = _a2a(ans_b, axis)
+    CNT = _a2a(cnt_b, axis)
+    MISS = _a2a(miss_b, axis)
+    bad = jnp.zeros((), jnp.int32)
+    if with_check:
+        # the return a2a puts answerer s's block at position s: recompute
+        # each block's checksum with THAT shard's salt and quarantine
+        # (zero) mismatches before any key can reach a result row
+        CHK = _a2a(chk, axis)                           # (S,) chk_s[me]
+        got = _leg_checksum(ANS, CNT, MISS,
+                            jnp.arange(S, dtype=jnp.int64))
+        blk_ok = got == CHK                             # (S,)
+        bad = jnp.sum(~blk_ok).astype(jnp.int32)
+        ANS = jnp.where(blk_ok[:, None, None], ANS, 0)
+        CNT = jnp.where(blk_ok[:, None], CNT, 0)
+        MISS = jnp.where(blk_ok[:, None], MISS, 0)
     # claim this shard's answers by bucket slot (block s answered shard s)
     dest = jnp.arange(S)[None, :]
     claim_ok = slot < bucket_cap                        # dropped copies -> 0
@@ -193,12 +267,15 @@ def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
     mv = apply_residual(mk, mv, flt, msk, eq_positions)
     my_missed = (jnp.sum(miss_bs, axis=1) + jnp.maximum(total - probe_cap, 0)
                  + drop_cnt)
+    if with_check:
+        return mk, mv, my_missed.astype(jnp.int32), bad
     return mk, mv, my_missed.astype(jnp.int32)
 
 
 def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
                axis: str, impl: str = "jnp", region=None,
-               routing: str = "broadcast", splits=None, bucket_cap: int = 0):
+               routing: str = "broadcast", splits=None, bucket_cap: int = 0,
+               fault=None, with_check: bool = False):
     """Distributed GET: ship probe keys, answer locally, scatter matches
     back to origin shards. lo/hi: (B,) local probes. Returns (k (B, cap),
     valid (B, cap), missed (B,)) on the origin shard.
@@ -221,9 +298,13 @@ def dist_probe(lo, hi, flt, msk, eq_positions, local_keys, probe_cap: int,
         S = _axis_size(axis)
         cap = bucket_cap if bucket_cap > 0 else auto_bucket_cap(lo.shape[0], S)
         return _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
-                               probe_cap, axis, impl, splits, cap)
+                               probe_cap, axis, impl, splits, cap,
+                               fault=fault, with_check=with_check)
     if routing != "broadcast":
         raise ValueError(f"unknown routing {routing!r}")
+    if fault is not None or with_check:
+        raise ValueError("fault injection / answer-leg checksums hook the "
+                         "a2a answer leg — routing='broadcast' has none")
     S = _axis_size(axis)
     B = lo.shape[0]
     me = jax.lax.axis_index(axis)
@@ -357,29 +438,37 @@ def dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
 def dist_probe_batched(lo, hi, flt, msk, eq_positions, local_keys,
                        probe_cap: int, axis: str, impl: str = "jnp",
                        region=None, routing: str = "broadcast", splits=None,
-                       bucket_cap: int = 0):
+                       bucket_cap: int = 0, fault=None,
+                       with_check: bool = False):
     """dist_probe over a leading query axis: lo/hi (Q, B), flt (Q, B, 3).
     ONE collective round serves all Q queries; with routing="a2a" the
     per-destination `bucket_cap` is sized for the whole flattened batch
     (the serving engine amortizes the per-query tuned cap: batch x tuned).
-    Returns (k (Q, B, cap), valid (Q, B, cap), missed (Q, B))."""
+    Returns (k (Q, B, cap), valid (Q, B, cap), missed (Q, B)); with
+    ``with_check`` a scalar `bad` (quarantined answer-block count, summed
+    over the shared collective round) is appended."""
     q, b = lo.shape
-    k, valid, missed = dist_probe(
+    out = dist_probe(
         lo.reshape(q * b), hi.reshape(q * b), flt.reshape(q * b, 3), msk,
         eq_positions, local_keys, probe_cap, axis, impl, region=region,
-        routing=routing, splits=splits, bucket_cap=bucket_cap)
-    return (k.reshape(q, b, probe_cap), valid.reshape(q, b, probe_cap),
-            missed.reshape(q, b))
+        routing=routing, splits=splits, bucket_cap=bucket_cap,
+        fault=fault, with_check=with_check)
+    k, valid, missed = out[:3]
+    shaped = (k.reshape(q, b, probe_cap), valid.reshape(q, b, probe_cap),
+              missed.reshape(q, b))
+    return shaped + (out[3],) if with_check else shaped
 
 
 def batched_dist_mapsin_step(bnd: Bindings, pattern, local_keys,
                              probe_cap: int, out_cap: int, axis: str,
                              impl: str = "jnp", shard_splits=None,
                              routing: str = "broadcast",
-                             bucket_cap: int = 0) -> Bindings:
+                             bucket_cap: int = 0, fault=None,
+                             with_check: bool = False) -> Bindings:
     """dist_mapsin_step over batched Bindings (table (Q, cap, nv), valid
     (Q, cap), overflow (Q,)): one shared collective round, vmapped local
-    merge."""
+    merge. With ``with_check`` returns ``(Bindings, bad)`` — `bad` is the
+    scalar quarantined-answer-block count for this step's collective."""
     from repro.core.mapsin import merge_bindings
     q, cap, nv = bnd.table.shape
     plan = make_plan(pattern, bnd.vars)
@@ -389,22 +478,27 @@ def batched_dist_mapsin_step(bnd: Bindings, pattern, local_keys,
     lo = jnp.where(v, lo, 0)
     hi = jnp.where(v, hi, 0)
     flt, msk = residual_values(plan, flat)
-    k, valid, missed = dist_probe_batched(
+    out = dist_probe_batched(
         lo.reshape(q, cap), hi.reshape(q, cap), flt.reshape(q, cap, 3), msk,
         plan.eq_positions, local_keys, probe_cap, axis, impl,
         region=_my_region(shard_splits, axis), routing=routing,
-        splits=shard_splits, bucket_cap=bucket_cap)
+        splits=shard_splits, bucket_cap=bucket_cap,
+        fault=fault, with_check=with_check)
+    k, valid, missed = out[:3]
     merge = lambda b, kk, vv, mm: merge_bindings(b, plan, kk, vv, mm, out_cap)
-    return jax.vmap(merge)(bnd, k, valid, missed)
+    merged = jax.vmap(merge)(bnd, k, valid, missed)
+    return (merged, out[3]) if with_check else merged
 
 
 def batched_dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
                                row_cap: int, out_cap: int, axis: str,
                                impl: str = "jnp", shard_splits=None,
                                routing: str = "broadcast",
-                               bucket_cap: int = 0) -> Bindings:
+                               bucket_cap: int = 0, fault=None,
+                               with_check: bool = False) -> Bindings:
     """dist_multiway_step over batched Bindings: the single row-GET round
-    is shared by the whole batch, the per-pattern merge tail is vmapped."""
+    is shared by the whole batch, the per-pattern merge tail is vmapped.
+    With ``with_check`` returns ``(Bindings, bad)``."""
     q, cap, nv = bnd.table.shape
     plans = [make_plan(p, bnd.vars) for p in patterns]
     p0 = plans[0]
@@ -414,13 +508,16 @@ def batched_dist_multiway_step(bnd: Bindings, patterns: Sequence, local_keys,
     lo = jnp.where(v, lo, 0).reshape(q, cap)
     hi = jnp.where(v, hi, 0).reshape(q, cap)
     no_flt = jnp.zeros((q, cap, 3), jnp.int64)
-    k, in_row, missed = dist_probe_batched(
+    out = dist_probe_batched(
         lo, hi, no_flt, (False,) * 3, (), local_keys, row_cap, axis, impl,
         region=_my_region(shard_splits, axis), routing=routing,
-        splits=shard_splits, bucket_cap=bucket_cap)
+        splits=shard_splits, bucket_cap=bucket_cap,
+        fault=fault, with_check=with_check)
+    k, in_row, missed = out[:3]
     merge = lambda b, kk, rr, mm: _multiway_local_merge(
         b, plans, kk, rr, mm, row_cap, out_cap)
-    return jax.vmap(merge)(bnd, k, in_row, missed)
+    merged = jax.vmap(merge)(bnd, k, in_row, missed)
+    return (merged, out[3]) if with_check else merged
 
 
 # ---------------------------------------------------------------------------

@@ -77,6 +77,32 @@ def quantize_cap(cap: int) -> int:
     return (3 * k) // 4 if cap <= (3 * k) // 4 else k
 
 
+def next_cap(cap: int) -> int:
+    """The escalation successor of a capacity: the power of two STRICTLY
+    above `cap` (floored at the grid minimum 8). Strictly increasing from
+    any start, so an escalation chain never repeats a cap, and it lands
+    back on the ``quantize_cap`` grid from either family of grid points:
+    ``2^k -> 2^(k+1)`` and ``3*2^(k-1) -> 2^(k+1)`` (12 -> 16, 24 -> 32,
+    48 -> 64) — geometric growth, at most two escalations per octave of
+    actual demand."""
+    return max(1 << int(cap).bit_length(), 8)
+
+
+def escalate_caps(caps: Caps) -> Caps:
+    """One overflow-escalation move: every truncating capacity advances to
+    its ``next_cap`` (the serving engine re-plans and re-executes an
+    overflowed query at the escalated budget; see DESIGN.md §7). All four
+    row budgets move together — the overflow counter is cumulative across
+    steps, so the escalation cannot tell a probe-cap drop from an out-cap
+    drop, and growing only one would stall the chain when the other is the
+    binding constraint. ``a2a_bucket_cap`` resets to 0 so the planner
+    re-embeds the measured a2a capacities at the new budget."""
+    return dataclasses.replace(
+        caps, scan_cap=next_cap(caps.scan_cap),
+        probe_cap=next_cap(caps.probe_cap), row_cap=next_cap(caps.row_cap),
+        out_cap=next_cap(caps.out_cap), a2a_bucket_cap=0)
+
+
 @dataclasses.dataclass(frozen=True)
 class LogicalPlan:
     """What to answer: a conjunctive BGP, order-free."""

@@ -1,6 +1,10 @@
-"""Query serving subsystem (DESIGN.md §5): SPARQL BGP front-end +
-batched multi-query executor on top of the MAPSIN probe engine."""
+"""Query serving subsystem (DESIGN.md §5, §7): SPARQL BGP front-end +
+batched multi-query executor on top of the MAPSIN probe engine, with the
+robustness layer (overflow-escalation retries, deadlines, load shedding,
+fault injection)."""
 from repro.serve.sparql import ParsedQuery, parse_bgp  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
-    EngineBusy, QueryResult, ServeEngine, plan_signature,
+    EngineBusy, QueryResult, QueryShed, QueryTimeout, ServeEngine,
+    plan_signature,
 )
+from repro.serve.faults import Fault, FaultPlan  # noqa: F401

@@ -42,6 +42,19 @@ tenant asks "students of <their> department"). The engine exploits that:
   embedded per-step answer caps, both quantized (``quantize_cap``) to
   bound compile diversity. The engine never calls a tune_* function.
 
+* **Robustness layer** (DESIGN.md §7): a completed dispatch that
+  reports nonzero overflow is not delivered truncated — the engine
+  replans the query at geometrically escalated Caps (``escalate_caps``,
+  bounded by ``max_escalations``) and re-enqueues it; the final attempt
+  drops to the unrestricted planner's exact ``reduce_side`` fallback
+  via ``execute_local``. Per-query deadlines shed expired queries with
+  structured ``QueryTimeout`` results; a full queue sheds by priority
+  (``QueryShed`` + ``retry_after``) before raising ``EngineBusy`` (which
+  now carries the compiled plan and the hint); a seeded ``FaultPlan``
+  injects drop/corrupt/delay faults into the a2a answer legs, which
+  answer-leg checksums detect and the dispatch loop retries — wrong
+  rows are structurally impossible (mismatched blocks are zeroed).
+
 Results are per-slot Bindings — bit-identical row sets to
 ``execute_local`` on the same (patterns, cfg, caps), which tests verify
 against ``execute_oracle`` as well (sharded results keep ``out_cap``
@@ -66,18 +79,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mapsin as ms
-from repro.core.bgp import ExecConfig, apply_dist_step, mesh_fingerprint
+from repro.core.bgp import (ExecConfig, apply_dist_step, execute_local,
+                            mesh_fingerprint)
 from repro.core.mapsin import Bindings, apply_residual, compact
 from repro.core.plan import make_plan, probe_ranges, residual_values
-from repro.core.planner import (ENGINE_OPERATORS, Caps, PhysicalPlan,
-                                PlanStep, compile_plan, quantize_cap)
+from repro.core.planner import (ALL_OPERATORS, ENGINE_OPERATORS, Caps,
+                                PhysicalPlan, PlanStep, compile_plan,
+                                escalate_caps, quantize_cap)
 from repro.core.rdf import Pattern, is_var, unpack3
 from repro.core.triple_store import LRUCache, TripleStore
+from repro.serve.faults import FaultPlan
 from repro.serve.sparql import ParsedQuery, parse_bgp
 
 
 class EngineBusy(RuntimeError):
-    """Admission control: the request queue is at max_queue depth."""
+    """Admission control: the request queue is at max_queue depth and no
+    queued request has strictly lower priority than the incoming one.
+
+    Carries the planning work the rejection would otherwise waste:
+    ``plan`` is the compiled PhysicalPlan (a client-side retry submits it
+    directly and skips replanning — the signature cache then skips even
+    the canonicalization) and ``retry_after`` is the engine's estimate in
+    seconds of when a slot frees up (measured per-dispatch service time x
+    queue depth in dispatches), 0.0 before any dispatch has been timed."""
+
+    def __init__(self, msg: str, plan: PhysicalPlan | None = None,
+                 retry_after: float = 0.0):
+        super().__init__(msg)
+        self.plan = plan
+        self.retry_after = retry_after
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +237,29 @@ class QueryResult:
 
 
 @dataclasses.dataclass
+class QueryTimeout(QueryResult):
+    """Structured deadline-expiry result (DESIGN.md §7): the query was
+    SHED, not answered — ``rows`` is always empty, never a truncated row
+    set masquerading as complete. ``phase`` says where the deadline hit
+    ("queued" — expired before any dispatch; "dispatch" — the batched
+    cascade it rode finished past the deadline, or tripped the engine
+    watchdog; "escalation" — expired while re-queued for an
+    overflow-escalation retry). ``stats`` carries the partial per-step
+    counters of the last completed attempt, if any."""
+    phase: str = "queued"
+    deadline_s: float = 0.0         # the absolute deadline (enq clock)
+    waited_s: float = 0.0           # time from enqueue to expiry
+
+
+@dataclasses.dataclass
+class QueryShed(QueryResult):
+    """Load-shedding result: the request was evicted from a full queue by
+    a strictly higher-priority submit. ``retry_after`` is the engine's
+    service-time-based hint in seconds for when to resubmit."""
+    retry_after: float = 0.0
+
+
+@dataclasses.dataclass
 class _Request:
     rid: int
     tid: int                        # interned template id (the bucket key)
@@ -220,6 +273,15 @@ class _Request:
     tuned: int = 0                  # this query's tuned a2a bucket cap
                                     # (0 = untuned / not applicable)
     step_caps: tuple | None = None  # measured per-join-step answer caps
+    patterns: tuple | None = None   # original patterns (escalation replans)
+    ecaps: Caps | None = None       # effective caps this attempt runs at
+    attempt: int = 0                # completed overflow escalations so far
+    deadline: float | None = None   # absolute deadline on the enq clock
+    tenant: str | None = None       # shedding accounting key
+    priority: int = 0               # higher wins under a full queue
+    inexact_ok: bool = False        # bounded-inexact opt-in: serve capped
+                                    # results + counters, never escalate
+    prior_stats: dict | None = None  # last attempt's stats (timeout payload)
 
 
 def _pow2_at_least(n: int) -> int:
@@ -253,7 +315,12 @@ class ServeEngine:
                  max_batch: int = 32, max_queue: int = 256,
                  compile_cache_size: int = 32, starvation_limit: int = 4,
                  mesh=None, axis: str = "data",
-                 min_batch: int = 1, max_wait_s: float = 0.0):
+                 min_batch: int = 1, max_wait_s: float = 0.0,
+                 max_escalations: int = 3,
+                 dispatch_timeout_s: float | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 check_answers: bool | None = None,
+                 fault_retries: int = 2):
         if mode != "mapsin":
             raise ValueError("ServeEngine serves the MAPSIN path only "
                              "(reduce-side re-scans need an empty domain)")
@@ -263,11 +330,27 @@ class ServeEngine:
                 f"{axis!r} has {int(mesh.shape[axis])} devices")
         if min_batch > max_batch:
             raise ValueError("min_batch cannot exceed max_batch")
+        if fault_plan is not None and (mesh is None
+                                       or cfg.routing != "a2a"):
+            raise ValueError("fault injection hooks the a2a answer leg — "
+                             "it needs a mesh and routing='a2a'")
         self.store, self.dictionary = store, dictionary
         self.cfg, self.caps, self.mode = cfg, caps, mode
         self.mesh, self.axis = mesh, axis
         self.max_batch, self.max_queue = max_batch, max_queue
         self.min_batch, self.max_wait_s = min_batch, max_wait_s
+        self.max_escalations = max_escalations
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.fault_plan = fault_plan
+        # answer-leg checksums ride every dispatch when faults are being
+        # injected (or on explicit opt-in); the check is what turns an
+        # injected fault into a detected-and-retried one
+        self.check_answers = (check_answers if check_answers is not None
+                              else fault_plan is not None)
+        if self.check_answers and (mesh is None or cfg.routing != "a2a"):
+            raise ValueError("answer-leg checksums need a mesh and "
+                             "routing='a2a'")
+        self.fault_retries = fault_retries
         self._compiled = LRUCache(compile_cache_size)
         self._signatures = LRUCache(max(4 * compile_cache_size, 64))
         # template interning: hashing a Template (a whole step tuple) per
@@ -275,6 +358,8 @@ class ServeEngine:
         # buckets key on a small int instead
         self._template_ids: dict[Template, int] = {}
         self._queue: deque[_Request] = deque()
+        self._shed: list[QueryResult] = []   # shed/timeout results awaiting
+                                             # delivery by the next step()
         self._next_rid = 0
         self.starvation_limit = starvation_limit
         self._head_skips = 0            # consecutive steps the oldest
@@ -283,19 +368,72 @@ class ServeEngine:
         self.dispatched_queries = 0     # requests served by them
         self.a2a_payload_bytes = 0      # static per-shard a2a collective
                                         # payload shipped by dispatches
+        self._service_ewma = 0.0        # measured seconds per dispatch
+        self.fault_epoch = 0            # monotone physical-dispatch counter
+                                        # (faults key on it; retries advance)
+        self.escalations = 0            # overflow-escalation re-dispatches
+        self.fallbacks = 0              # exact reduce_side fallback runs
+        self.timeouts = 0               # deadline-shed queries
+        self.corrupt_detected = 0       # quarantined answer blocks seen
+        self.fault_redispatches = 0     # dispatches retried on detection
+        self.shed_by_tenant: dict = {}  # tenant -> evicted-request count
 
     # --- admission -------------------------------------------------------
 
     def pending(self) -> int:
         return len(self._queue)
 
-    def submit(self, query, arrival: float | None = None) -> int:
+    def _retry_after(self) -> float:
+        """Resubmission hint in seconds: measured per-dispatch service
+        time (EWMA) x queue depth in dispatches. 0.0 until a dispatch has
+        been timed — an idle engine has nothing to wait for."""
+        if self._service_ewma <= 0.0:
+            return 0.0
+        depth = max(1, -(-len(self._queue) // max(self.max_batch, 1)))
+        return self._service_ewma * depth
+
+    def _signature_for(self, patterns, caps: Caps, plan=None):
+        """(tid, template, consts, var_order, tuned, step_caps) for the
+        query at a given cap budget, LRU-cached. cfg AND caps are part of
+        the key: planning (ordering, multiway grouping, embedded
+        capacities) depends on both, so a config change — or an
+        overflow-escalated budget — must re-plan; a user-supplied plan
+        keys on itself."""
+        sig_key = ("sig", plan if plan is not None else patterns,
+                   self.cfg, caps)
+        hit = self._signatures.get(sig_key)
+        if hit is None:
+            if plan is None:
+                plan = self._compile(patterns, caps)
+            template, consts, var_order = plan_signature(
+                self.store, patterns, self.cfg, caps, self.mode, plan=plan)
+            tid = self._template_ids.setdefault(template,
+                                                len(self._template_ids))
+            tuned, step_caps = self._plan_caps(plan, caps)
+            hit = (tid, template, consts, var_order, tuned, step_caps)
+            self._signatures[sig_key] = hit
+        return hit
+
+    def submit(self, query, arrival: float | None = None,
+               deadline_s: float | None = None, tenant: str | None = None,
+               priority: int = 0, inexact_ok: bool = False) -> int:
         """Enqueue one query (SPARQL text, ParsedQuery, a compiled
         PhysicalPlan, or a Pattern sequence); returns its request id.
-        Raises EngineBusy when the queue is at max_queue (admission
-        control) and ValueError for malformed SPARQL / unknown terms /
-        plans the template cascade cannot express (fail at the front
-        door)."""
+        Raises ValueError for malformed SPARQL / unknown terms / plans
+        the template cascade cannot express (fail at the front door).
+
+        QoS knobs (DESIGN.md §7): `deadline_s` bounds total time in the
+        engine — an expired query is shed with a structured QueryTimeout
+        instead of occupying batch slots. `priority` breaks admission
+        ties under a full queue: instead of the EngineBusy cliff, a
+        higher-priority submit evicts the lowest-priority queued request
+        (delivered as a QueryShed result with a `retry_after` hint);
+        equal-or-lower priority still raises EngineBusy — which now
+        carries the compiled plan and the retry_after hint, so the
+        rejected client's planning work is not wasted. `inexact_ok`
+        opts into bounded-inexact degraded mode: an overflowed result is
+        served as-is with its per-step overflow counters attached
+        (stats["degraded"]) rather than escalated."""
         select = None
         plan = None
         if isinstance(query, str):
@@ -329,60 +467,77 @@ class ServeEngine:
             patterns = tuple(query)
         if not patterns:
             raise ValueError("empty query")
+        # signature BEFORE admission: a rejected submit still returns its
+        # compiled plan (satellite: EngineBusy must not waste the planning
+        # work), and the LRU keeps the cost at one dict probe on repeats
+        tid, template, consts, var_order, tuned, step_caps = \
+            self._signature_for(patterns, self.caps, plan=plan)
         if len(self._queue) >= self.max_queue:
-            raise EngineBusy(f"queue depth {len(self._queue)} at max_queue")
-        # cfg AND caps are part of the signature key: planning (ordering,
-        # multiway grouping, embedded capacities) depends on both, so a
-        # config change must re-plan; a user-supplied plan keys on itself
-        sig_key = ("sig", plan if plan is not None else patterns,
-                   self.cfg, self.caps)
-        hit = self._signatures.get(sig_key)
-        if hit is None:
-            if plan is None:
-                plan = self._compile(patterns)
-            template, consts, var_order = plan_signature(
-                self.store, patterns, self.cfg, self.caps, self.mode,
-                plan=plan)
-            tid = self._template_ids.setdefault(template,
-                                                len(self._template_ids))
-            tuned, step_caps = self._plan_caps(plan)
-            hit = (tid, template, consts, var_order, tuned, step_caps)
-            self._signatures[sig_key] = hit
-        tid, template, consts, var_order, tuned, step_caps = hit
+            victim = None
+            for r in self._queue:
+                if r.priority < priority and (
+                        victim is None
+                        or (r.priority, -r.enq) < (victim.priority,
+                                                   -victim.enq)):
+                    victim = r
+            if victim is None:
+                raise EngineBusy(
+                    f"queue depth {len(self._queue)} at max_queue",
+                    plan=(plan if plan is not None
+                          else self._compile(patterns)),
+                    retry_after=self._retry_after())
+            # graceful degradation: evict the lowest-priority (most
+            # recently enqueued among ties) request instead of cliffing
+            self._queue.remove(victim)
+            self._shed.append(QueryShed(
+                victim.rid, victim.var_order,
+                np.zeros((0, len(victim.var_order)), np.int32), 0,
+                victim.select, victim.prior_stats,
+                retry_after=self._retry_after()))
+            self.shed_by_tenant[victim.tenant] = (
+                self.shed_by_tenant.get(victim.tenant, 0) + 1)
         rid = self._next_rid
         self._next_rid += 1
         enq = arrival if arrival is not None else time.monotonic()
-        self._queue.append(_Request(rid, tid, template, consts, var_order,
-                                    select, arrival, enq, tuned, step_caps))
+        deadline = None if deadline_s is None else enq + deadline_s
+        self._queue.append(_Request(
+            rid, tid, template, consts, var_order, select, arrival, enq,
+            tuned, step_caps, patterns=patterns, ecaps=self.caps,
+            deadline=deadline, tenant=tenant, priority=priority,
+            inexact_ok=inexact_ok))
         return rid
 
     # --- batched execution ----------------------------------------------
 
-    def _compile(self, patterns) -> PhysicalPlan:
-        """Compile the query with the engine's operator set. With a mesh,
-        a2a routing, and an unpinned bucket cap, compile_plan embeds the
-        measured a2a capacities into the plan's steps (one instrumented
-        run per DISTINCT query, cached on the store — exactly the cost
-        execute_sharded pays); the engine reads the caps off the plan,
-        it never tunes anything itself."""
+    def _compile(self, patterns, caps: Caps | None = None) -> PhysicalPlan:
+        """Compile the query with the engine's operator set at `caps`
+        (default: the engine's base budget; escalation passes the
+        escalated one). With a mesh, a2a routing, and an unpinned bucket
+        cap, compile_plan embeds the measured a2a capacities into the
+        plan's steps (one instrumented run per DISTINCT query, cached on
+        the store — exactly the cost execute_sharded pays); the engine
+        reads the caps off the plan, it never tunes anything itself."""
+        caps = self.caps if caps is None else caps
         num_shards = (self.store.num_shards
                       if (self.mesh is not None
                           and self.cfg.routing == "a2a"
-                          and self.caps.a2a_bucket_cap == 0) else 0)
-        return compile_plan(self.store, patterns, self.caps, mode=self.mode,
+                          and caps.a2a_bucket_cap == 0) else 0)
+        return compile_plan(self.store, patterns, caps, mode=self.mode,
                             reorder=self.cfg.reorder,
                             operators=ENGINE_OPERATORS,
                             routing=self.cfg.routing, num_shards=num_shards)
 
-    def _plan_caps(self, plan: PhysicalPlan) -> tuple:
+    def _plan_caps(self, plan: PhysicalPlan,
+                   caps: Caps | None = None) -> tuple:
         """Per-request capacity values read OFF the plan: (bucket cap,
         per-join-step answer caps). The bucket caps SUM across batch
         members (_bucket_cap_for), the answer caps MAX across them
         (_step_caps_for — the a2a return leg is per probe, so the widest
         member's embedded cap bounds everyone). ((0, None) when the plan
         carries no embedded a2a capacities.)"""
+        caps = self.caps if caps is None else caps
         if (self.mesh is None or self.cfg.routing != "a2a"
-                or self.caps.a2a_bucket_cap > 0):
+                or caps.a2a_bucket_cap > 0):
             return 0, None
         tuned = max((st.caps.a2a_bucket_cap for st in plan.steps[1:]),
                     default=0)
@@ -401,18 +556,20 @@ class ServeEngine:
         max would). Clamped at batch x out_cap, the structural bound (a
         query never routes more probes than out_cap bindings per shard).
         """
+        ecaps = (reqs[0].ecaps if reqs and reqs[0].ecaps is not None
+                 else self.caps)
         if self.mesh is None or self.cfg.routing != "a2a":
             return 0
-        if self.caps.a2a_bucket_cap > 0:
-            per_query = min(self.caps.a2a_bucket_cap, self.caps.out_cap)
+        if ecaps.a2a_bucket_cap > 0:
+            per_query = min(ecaps.a2a_bucket_cap, ecaps.out_cap)
             return batch * per_query
         # unembedded slots (possible only when a request was admitted under
         # a different config than it dispatches with) fall back to the
         # drop-free out_cap bound
-        tuned = [r.tuned if r.tuned > 0 else self.caps.out_cap for r in reqs]
+        tuned = [r.tuned if r.tuned > 0 else ecaps.out_cap for r in reqs]
         total = sum(tuned) + (batch - len(reqs)) * (tuned[0] if tuned
-                                                    else self.caps.out_cap)
-        return min(quantize_cap(total), batch * self.caps.out_cap)
+                                                    else ecaps.out_cap)
+        return min(quantize_cap(total), batch * ecaps.out_cap)
 
     def _step_caps_for(self, reqs: list, template: Template) -> tuple:
         """Per-join-step a2a answer caps for one dispatch: the MAX of the
@@ -422,11 +579,13 @@ class ServeEngine:
         to it for unembedded members. Right-sizes the dominant return-leg
         payload: a point-probe step ships 8 key slots per routed probe
         instead of the configured probe_cap."""
+        ecaps = (reqs[0].ecaps if reqs and reqs[0].ecaps is not None
+                 else self.caps)
         base_caps = tuple(st.caps.row_cap if st.kind == "multiway"
                           else st.caps.probe_cap
                           for st in template.steps[1:])
         if (self.mesh is None or self.cfg.routing != "a2a"
-                or self.caps.a2a_bucket_cap > 0):
+                or ecaps.a2a_bucket_cap > 0):
             return base_caps
         caps = list(base_caps)
         for i, dflt in enumerate(base_caps):
@@ -449,19 +608,23 @@ class ServeEngine:
                    for cap in step_caps)
 
     def _compiled_batch(self, tid: int, template: Template, batch: int,
-                        bucket_cap: int, step_caps: tuple):
+                        bucket_cap: int, step_caps: tuple,
+                        fsel=None, with_check: bool = False):
         # full ExecConfig + mesh identity + store shard layout (+ the
-        # resolved bucket/answer caps, compile-time constants) key the
-        # cache: toggling routing/caps, re-pointing at a resharded store,
-        # or re-sized buckets can never reuse a stale compiled cascade
+        # resolved bucket/answer caps and fault selection, compile-time
+        # constants) key the cache: toggling routing/caps, re-pointing at
+        # a resharded store, re-sized buckets, or a different injected
+        # fault pattern can never reuse a stale compiled cascade. Clean
+        # epochs all carry fsel=None — they share ONE checked cascade.
         mesh_id = (None if self.mesh is None
                    else mesh_fingerprint(self.mesh, self.axis))
         key = ("batched", tid, batch, self.cfg, self.caps, mesh_id,
-               self.store.layout_key, bucket_cap, step_caps)
+               self.store.layout_key, bucket_cap, step_caps, fsel,
+               with_check)
         hit = self._compiled.get(key)
         if hit is None:
             hit = (self._build_sharded(template, batch, bucket_cap,
-                                       step_caps)
+                                       step_caps, fsel, with_check)
                    if self.mesh is not None else self._build(template, batch))
             self._compiled[key] = hit
         return hit
@@ -497,7 +660,8 @@ class ServeEngine:
         return jax.jit(batched, donate_argnums=donate), scratch_vars
 
     def _build_sharded(self, template: Template, batch: int,
-                       bucket_cap: int, step_caps: tuple):
+                       bucket_cap: int, step_caps: tuple,
+                       fsel=None, with_check: bool = False):
         """The tentpole: one shard_map dispatch serves the whole batch
         against the region-sharded store. Inside the per-shard body the
         seed scan is vmapped over the batch against the LOCAL key slice
@@ -507,7 +671,15 @@ class ServeEngine:
         dist_probe collective round (apply_dist_step(batched=True)) and
         vmaps the merge back to per-query slots. Returns a jitted
         (keys_spo (S, cap), keys_ops (S, cap), consts (batch, n_consts))
-        -> (table (S, batch, out_cap, nv), valid, overflow (S, batch))."""
+        -> (table (S, batch, out_cap, nv), valid, overflow (S, batch),
+        step_ovf, bad (S,)).
+
+        `fsel`/`with_check` (DESIGN.md §7): fsel is the per-join-step
+        static fault selection of ONE dispatch epoch (serve/faults.py);
+        with_check adds the answer-leg checksum verify, whose per-shard
+        quarantined-block count is summed into the `bad` output the
+        dispatch loop retries on. Both are compile-time constants of the
+        cascade."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         cfg = self.cfg
@@ -526,6 +698,7 @@ class ServeEngine:
         splits_spo = np.asarray(self.store.splits_spo)
         splits_ops = np.asarray(self.store.splits_ops)
         axis = self.axis
+        out_cap = steps[0].caps.out_cap
 
         def fn(keys_spo, keys_ops, consts):
             keys_spo = keys_spo.reshape(-1)
@@ -535,52 +708,65 @@ class ServeEngine:
             splits_of = lambda pat, dom: (
                 splits_spo if make_plan(pat, dom).index == 0 else splits_ops)
             seed_keys = keys_of(first, const_vars)
-            scr = self._scratch(scratch_vars, batch)
+            scr = self._scratch(scratch_vars, batch, out_cap)
             bnd = jax.vmap(
                 lambda c, s: _seed_scan(first, const_vars, seed_keys, c,
-                                        steps[0].caps.out_cap, cfg.impl,
+                                        out_cap, cfg.impl,
                                         s))(consts, scr)
             ovfs = [bnd.overflow]
-            for st in eff_steps[1:]:
+            bad = jnp.zeros((), jnp.int32)
+            for i, st in enumerate(eff_steps[1:]):
                 keys = keys_of(st.patterns[0], bnd.vars)
-                bnd = apply_dist_step(
+                out = apply_dist_step(
                     bnd, st, keys, splits_of(st.patterns[0], bnd.vars),
-                    cfg, axis, batched=True)
+                    cfg, axis, batched=True,
+                    fault=fsel[i] if fsel is not None else None,
+                    with_check=with_check)
+                if with_check:
+                    bnd, bad_i = out
+                    bad = bad + bad_i
+                else:
+                    bnd = out
                 ovfs.append(bnd.overflow)
             step_ovf = jnp.stack(ovfs)           # (n_steps, batch) cumulative
             return (bnd.table[None], bnd.valid[None], bnd.overflow[None],
-                    step_ovf[None])
+                    step_ovf[None], bad[None])
 
         sharded = shard_map(
             fn, mesh=self.mesh,
             in_specs=(P(axis, None), P(axis, None), P(None, None)),
             out_specs=(P(axis, None, None, None), P(axis, None, None),
-                       P(axis, None), P(axis, None, None)),
+                       P(axis, None), P(axis, None, None), P(axis)),
             check_rep=False)
         return jax.jit(sharded), scratch_vars
 
     def _dispatch(self, tid: int, template: Template, batch: int,
-                  consts: np.ndarray, bucket_cap: int, step_caps: tuple):
+                  consts: np.ndarray, bucket_cap: int, step_caps: tuple,
+                  fsel=None, with_check: bool = False):
         """Run one compiled batched cascade; returns per-shard numpy views
         (tables (S, batch, out_cap, nv), valids (S, batch, out_cap),
-        overflow (S, batch), step_ovf (S, batch, n_steps) cumulative) —
-        S == 1 on the local (mesh-less) path."""
-        jitted, scratch_vars = self._compiled_batch(tid, template, batch,
-                                                    bucket_cap, step_caps)
+        overflow (S, batch), step_ovf (S, batch, n_steps) cumulative, and
+        the int quarantined-block count `bad`) — S == 1 and bad == 0 on
+        the local (mesh-less) path."""
+        jitted, scratch_vars = self._compiled_batch(
+            tid, template, batch, bucket_cap, step_caps, fsel, with_check)
         if self.mesh is None:
+            out_cap = template.steps[0].caps.out_cap
             out, step_ovf = jitted(self.store.flat_keys(0),
                                    self.store.flat_keys(1),
                                    jnp.asarray(consts),
-                                   self._scratch(scratch_vars, batch))
+                                   self._scratch(scratch_vars, batch,
+                                                 out_cap))
             return (np.asarray(out.table)[None], np.asarray(out.valid)[None],
                     np.asarray(out.overflow)[None],
-                    np.asarray(step_ovf)[None])
-        t, v, o, so = jitted(self.store.keys_spo, self.store.keys_ops,
-                             jnp.asarray(consts))
+                    np.asarray(step_ovf)[None], 0)
+        t, v, o, so, bad = jitted(self.store.keys_spo, self.store.keys_ops,
+                                  jnp.asarray(consts))
         self.a2a_payload_bytes += self._payload_bytes(bucket_cap, step_caps)
         # (S, n_steps, batch) -> (S, batch, n_steps)
         return (np.asarray(t), np.asarray(v), np.asarray(o),
-                np.transpose(np.asarray(so), (0, 2, 1)))
+                np.transpose(np.asarray(so), (0, 2, 1)),
+                int(np.asarray(bad).sum()))
 
     def precompile(self, query, batches: Sequence[int] | None = None):
         """Compile (and warm) the query's template cascade for the given
@@ -618,15 +804,67 @@ class ServeEngine:
                            self._step_caps_for(fake, template))
         self.a2a_payload_bytes = payload0      # warm-up ships no live traffic
 
-    def _scratch(self, scratch_vars: tuple[str, ...], batch: int) -> Bindings:
+    def _scratch(self, scratch_vars: tuple[str, ...], batch: int,
+                 out_cap: int | None = None) -> Bindings:
+        cap = self.caps.out_cap if out_cap is None else out_cap
         return Bindings(
             scratch_vars,
-            jnp.zeros((batch, self.caps.out_cap, len(scratch_vars)),
-                      jnp.int32),
-            jnp.zeros((batch, self.caps.out_cap), bool),
+            jnp.zeros((batch, cap, len(scratch_vars)), jnp.int32),
+            jnp.zeros((batch, cap), bool),
             jnp.zeros((batch,), jnp.int32))
 
-    def _run_bucket(self, reqs: list[_Request]) -> list[QueryResult]:
+    def _exact_fallback(self, r: _Request) -> QueryResult:
+        """The escalation chain's guaranteed-exact terminus: run the query
+        through the UNRESTRICTED planner (reduce_side available — the
+        operator a seeded template cascade cannot express) via
+        execute_local, escalating caps until nothing truncates (bounded;
+        caps double per try so the bound is generous). Single-store
+        execution: exactness beats the batched path's throughput on the
+        final attempt."""
+        caps = escalate_caps(r.ecaps if r.ecaps is not None else self.caps)
+        self.fallbacks += 1
+        for _ in range(8):
+            bnd = execute_local(self.store, r.patterns, self.mode, self.cfg,
+                                caps)
+            if int(bnd.overflow) == 0:
+                break
+            caps = escalate_caps(caps)
+        rows = np.asarray(bnd.table)[np.asarray(bnd.valid)]
+        ovf = np.asarray(bnd.step_overflow)
+        stats = {"kinds": ("fallback",),
+                 "overflow_per_step": tuple(
+                     int(x) for x in np.diff(ovf, prepend=0)),
+                 "fallback": "reduce_side", "attempt": r.attempt,
+                 "caps": caps}
+        return QueryResult(r.rid, tuple(bnd.vars), rows, int(bnd.overflow),
+                           r.select, stats)
+
+    def _escalate(self, r: _Request, stats: dict) -> None:
+        """Re-enqueue an overflowed request at the escalated cap budget:
+        replan (new signature/template — escalated plans ride the same
+        LRU caches, so a hot heavy-hitter template pays each budget's
+        compile once), keep identity/deadline/enq so total latency and
+        deadline accounting span all attempts."""
+        ecaps = escalate_caps(r.ecaps if r.ecaps is not None else self.caps)
+        tid, template, consts, var_order, tuned, step_caps = \
+            self._signature_for(r.patterns, ecaps)
+        self.escalations += 1
+        self._queue.append(dataclasses.replace(
+            r, tid=tid, template=template, consts=consts,
+            var_order=var_order, tuned=tuned, step_caps=step_caps,
+            ecaps=ecaps, attempt=r.attempt + 1, prior_stats=stats))
+
+    def _timeout(self, r: _Request, phase: str, now: float,
+                 stats: dict | None = None) -> QueryTimeout:
+        self.timeouts += 1
+        return QueryTimeout(
+            r.rid, r.var_order, np.zeros((0, len(r.var_order)), np.int32),
+            0, r.select, stats if stats is not None else r.prior_stats,
+            phase=phase, deadline_s=r.deadline or 0.0,
+            waited_s=max(now - r.enq, 0.0))
+
+    def _run_bucket(self, reqs: list[_Request],
+                    now: float | None = None) -> list[QueryResult]:
         template = reqs[0].template
         n = len(reqs)
         batch = min(_pow2_at_least(n), self.max_batch)
@@ -635,28 +873,79 @@ class ServeEngine:
             consts[i] = r.consts
         for i in range(n, batch):                    # padding slots re-run
             consts[i] = reqs[0].consts               # request 0, discarded
-        # (S, batch, out_cap, nv) per-shard tables; S == 1 without a mesh
-        tables, valids, overflow, step_ovf = self._dispatch(
-            reqs[0].tid, template, batch, consts,
-            self._bucket_cap_for(reqs, batch),
-            self._step_caps_for(reqs, template))
+        bucket_cap = self._bucket_cap_for(reqs, batch)
+        step_caps = self._step_caps_for(reqs, template)
+        with_check = self.check_answers and self.mesh is not None
+        n_joins = len(template.steps) - 1
+        t0 = time.monotonic()
+        delay = 0.0
+        bad = 0
+        # fault-detection retry loop: each physical dispatch attempt burns
+        # one fault epoch, so a retry naturally escapes a one-shot fault;
+        # clean epochs share one compiled cascade (fsel normalized to None)
+        for attempt in range(self.fault_retries + 1):
+            fsel = None
+            if self.fault_plan is not None:
+                epoch = self.fault_epoch
+                fsel = self.fault_plan.selection(epoch, n_joins)
+                delay += self.fault_plan.delay_s_at(epoch)
+                if not any(d or c for d, c in fsel):
+                    fsel = None
+            self.fault_epoch += 1
+            # (S, batch, out_cap, nv) per-shard tables; S == 1 un-meshed
+            tables, valids, overflow, step_ovf, bad = self._dispatch(
+                reqs[0].tid, template, batch, consts, bucket_cap,
+                step_caps, fsel, with_check)
+            if bad == 0:
+                break
+            self.corrupt_detected += bad
+            if attempt < self.fault_retries:
+                self.fault_redispatches += 1
+        elapsed = (time.monotonic() - t0) + delay
+        a = 0.3                                       # service-time EWMA
+        self._service_ewma = (elapsed if self._service_ewma == 0.0
+                              else a * elapsed + (1 - a) * self._service_ewma)
+        end_clock = (now if now is not None else t0) + elapsed
+        watchdog = (self.dispatch_timeout_s is not None
+                    and elapsed > self.dispatch_timeout_s)
         nk = template.n_consts
         kinds = tuple(st.kind for st in template.steps)
         self.dispatches += 1
         self.dispatched_queries += n
         results = []
         for i, r in enumerate(reqs):
-            rows = np.concatenate([tables[s, i][valids[s, i]]
-                                   for s in range(tables.shape[0])]
-                                  )[:, nk:nk + len(r.var_order)]
             # cumulative per-step counters summed over shards -> deltas:
             # which step dropped rows (probe vs out-cap truncation locale)
             cum = step_ovf[:, i, :].sum(axis=0)
             per_step = tuple(int(x) for x in np.diff(cum, prepend=0))
-            stats = {"kinds": kinds, "overflow_per_step": per_step}
-            results.append(QueryResult(r.rid, r.var_order, rows,
-                                       int(overflow[:, i].sum()), r.select,
-                                       stats))
+            stats = {"kinds": kinds, "overflow_per_step": per_step,
+                     "attempt": r.attempt}
+            if bad > 0:
+                stats["fault_unrecovered"] = True
+            deadline_ok = (r.deadline is None
+                           or (now is None and r.arrival is not None))
+            if watchdog or (not deadline_ok and end_clock > r.deadline):
+                # a dispatch that finishes past the deadline (or trips the
+                # engine watchdog) is SHED — never a truncated row set
+                # delivered as if complete
+                results.append(self._timeout(r, "dispatch", end_clock,
+                                             stats))
+                continue
+            ovf = int(overflow[:, i].sum())
+            if (ovf > 0 and not r.inexact_ok and self.max_escalations > 0
+                    and r.patterns is not None and bad == 0):
+                if r.attempt + 1 >= self.max_escalations:
+                    results.append(self._exact_fallback(r))
+                else:
+                    self._escalate(r, stats)
+                continue
+            if ovf > 0 and r.inexact_ok:
+                stats["degraded"] = True     # bounded-inexact, by request
+            rows = np.concatenate([tables[s, i][valids[s, i]]
+                                   for s in range(tables.shape[0])]
+                                  )[:, nk:nk + len(r.var_order)]
+            results.append(QueryResult(r.rid, r.var_order, rows, ovf,
+                                       r.select, stats))
         return results
 
     # --- scheduling ------------------------------------------------------
@@ -682,9 +971,34 @@ class ServeEngine:
         oldest queued request's bucket has been passed over
         `starvation_limit` consecutive steps, its bucket dispatches
         next regardless of size — latency is bounded by
-        starvation_limit dispatches, throughput stays batch-greedy."""
+        starvation_limit dispatches, throughput stays batch-greedy.
+
+        Deadline sweep (DESIGN.md §7): before picking a bucket, every
+        queued request whose absolute deadline has passed on the `now`
+        clock is shed with a QueryTimeout (phase "queued", or
+        "escalation" for an overflow-escalation retry) — expired queries
+        never occupy batch slots. Results evicted by priority shedding
+        (QueryShed) are delivered here too."""
+        out: list[QueryResult] = list(self._shed)
+        self._shed.clear()
         if not self._queue:
-            return []
+            return out
+        clock = now if now is not None else time.monotonic()
+        # clock-domain guard: arrival-stamped requests live on the harness
+        # clock — only an explicit `now` can expire them (monotonic time
+        # would instantly blow every replayed deadline)
+        expired = [r for r in self._queue
+                   if r.deadline is not None and clock >= r.deadline
+                   and (now is not None or r.arrival is None)]
+        if expired:
+            gone = {r.rid for r in expired}
+            self._queue = deque(r for r in self._queue
+                                if r.rid not in gone)
+            out.extend(self._timeout(
+                r, "escalation" if r.attempt > 0 else "queued", clock)
+                for r in expired)
+            if not self._queue:
+                return out
         buckets: dict[int, list[_Request]] = {}
         for r in self._queue:
             buckets.setdefault(r.tid, []).append(r)
@@ -695,10 +1009,8 @@ class ServeEngine:
             # fullest bucket first; FIFO within a bucket (deque order)
             pick = max(buckets.values(), key=len)
         if not force and len(pick) < self.min_batch:
-            if now is None:
-                now = time.monotonic()
-            if now - self._queue[0].enq < self.max_wait_s:
-                return []                 # defer: let the batch fill
+            if clock - self._queue[0].enq < self.max_wait_s:
+                return out                # defer: let the batch fill
             pick = buckets[head_tid]      # aged past max_wait_s: serve the
                                           # oldest request's bucket as-is
         chosen = pick[:self.max_batch]
@@ -708,11 +1020,12 @@ class ServeEngine:
             self._head_skips += 1
         taken = {r.rid for r in chosen}
         self._queue = deque(r for r in self._queue if r.rid not in taken)
-        return self._run_bucket(chosen)
+        out.extend(self._run_bucket(chosen, now=now))
+        return out
 
     def drain(self) -> list[QueryResult]:
         out: list[QueryResult] = []
-        while self._queue:
+        while self._queue or self._shed:
             out.extend(self.step(force=True))
         return out
 

@@ -154,6 +154,70 @@ def test_sharded_batched_serving_matches_local():
     assert res["payload"] > 0, res                # a2a traffic was accounted
 
 
+def test_chaos_suite_8dev_faults_detected_rows_exact():
+    """PR 6 chaos case at real shard count: a seeded FaultPlan injects
+    drops and corruptions into the 8-shard a2a answer legs across the
+    epoch schedule; the answer-leg checksums must detect every one, the
+    dispatch loop must retry onto clean epochs, and every delivered row
+    set must be bit-identical to execute_local — zero wrong rows under
+    chaos. A saturated all-epochs-faulty plan must exhaust the retry
+    budget with results flagged fault_unrecovered whose rows are a
+    SUBSET of the truth (quarantined, not corrupted)."""
+    res = run_in_subprocess(textwrap.dedent("""
+        import json, numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import (Caps, ExecConfig, Pattern, build_store,
+                                execute_local, rows_set)
+        from repro.serve import Fault, FaultPlan, ServeEngine
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        rng = np.random.RandomState(11)
+        tr = np.stack([rng.randint(0, 60, 800), rng.randint(100, 105, 800),
+                       rng.randint(0, 60, 800)], 1).astype(np.int32)
+        store = build_store(tr, num_shards=8)
+        store1 = build_store(tr, 1)
+        cfg = ExecConfig(routing="a2a")
+        caps = Caps(out_cap=2048, probe_cap=64, row_cap=64)
+        queries = [[Pattern("?x", 101, c), Pattern("?x", 102, "?y")]
+                   for c in (1, 5, 9, 13)]
+        queries += [[Pattern("?x", 101, "?y"), Pattern("?y", 102, "?z")]]
+        # seeded plan, high rate so several epochs are actually faulty
+        fp = FaultPlan.sample(3, num_shards=8, n_steps=1, rate=0.10,
+                              horizon=16)
+        assert any(fp.at(e, 0) != ((), ()) for e in range(16))
+        eng = ServeEngine(store, cfg=cfg, caps=caps, mesh=mesh,
+                          fault_plan=fp, fault_retries=4)
+        results = eng.execute(queries)
+        ok = True
+        for pats, r in zip(queries, results):
+            bnd = execute_local(store1, pats, "mapsin", caps=caps)
+            want = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+            ok = ok and r.rows_set(tuple(bnd.vars)) == want
+            ok = ok and "fault_unrecovered" not in (r.stats or {})
+        # saturated chaos: every epoch corrupts shard 2 -> unrecoverable,
+        # surviving rows still a strict subset of the truth, never wrong
+        sat = FaultPlan((Fault(0, 2, "corrupt", epoch=0),), period=1)
+        eng2 = ServeEngine(store, cfg=cfg, caps=caps, mesh=mesh,
+                           fault_plan=sat, fault_retries=2,
+                           max_escalations=0)
+        r2 = eng2.execute([queries[-1]])[0]
+        bnd = execute_local(store1, queries[-1], "mapsin", caps=caps)
+        want = rows_set(bnd.table, bnd.valid, len(bnd.vars))
+        subset = r2.rows_set(tuple(bnd.vars)) <= want
+        print(json.dumps({
+            "ok": ok, "detected": eng.corrupt_detected,
+            "redispatches": eng.fault_redispatches,
+            "unrecovered_flagged": bool(
+                (r2.stats or {}).get("fault_unrecovered")),
+            "subset": subset, "sat_detected": eng2.corrupt_detected}))
+    """))
+    assert res["ok"], res                          # zero wrong rows
+    assert res["detected"] > 0, res                # faults actually fired
+    assert res["redispatches"] > 0, res            # and were retried
+    assert res["unrecovered_flagged"], res
+    assert res["subset"], res                      # quarantine, not corruption
+    assert res["sat_detected"] >= 3, res
+
+
 def test_sharded_train_step_matches_single_device():
     """2x4 mesh (data x model) train step == single-device train step."""
     res = run_in_subprocess(textwrap.dedent("""
