@@ -22,7 +22,8 @@ import sys
 CHANGE_THRESHOLD = 0.05          # 5% relative move is worth a line
 HEADLINE = ("speedup", "qps_batched", "qps_seq", "time_ratio",
             "cold_speedup", "bytes_ratio", "avg_batch", "p99_ms_batched",
-            "probe_ratio", "order_changed", "p99_fault_ratio")
+            "probe_ratio", "order_changed", "p99_fault_ratio",
+            "trace_overhead_ratio", "span_coverage")
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 
@@ -37,7 +38,9 @@ def _load_ref(ref: str, relpath: str):
         return None
 
 
-def _metrics(row: dict) -> dict:
+def _metrics(row) -> dict:
+    if not isinstance(row, dict):        # hand-edited / truncated file
+        return {}
     out = {"us": row.get("us")}
     for k, v in row.get("derived", {}).items():
         if isinstance(v, (int, float)):
@@ -45,19 +48,48 @@ def _metrics(row: dict) -> dict:
     return out
 
 
+def _meta_line(new: dict) -> str | None:
+    meta = new.get("meta")
+    if not isinstance(meta, dict):
+        return None
+    return (f"stamped {meta.get('git_sha') or '?'} @ "
+            f"{meta.get('platform') or '?'}"
+            f"x{meta.get('device_count') or '?'}, "
+            f"{meta.get('timestamp') or '?'}")
+
+
 def diff_lines(ref: str = "HEAD^"):
     lines = [f"### Benchmark trajectory vs `{ref}`", "",
              "| row | metric | old | new | change |",
              "|---|---|---:|---:|---:|"]
     n_changes = 0
+    stamp = None
     for path in sorted(glob.glob(os.path.join(REPO, "benchmarks",
                                               "BENCH_*.json"))):
         rel = os.path.relpath(path, REPO)
-        with open(path) as f:
-            new = json.load(f)
+        try:
+            with open(path) as f:
+                new = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            # advisory diff: a missing/garbled suite file gets a note,
+            # never a traceback
+            lines.append(f"| {rel} | — | — | — | unreadable "
+                         f"({type(e).__name__}) |")
+            n_changes += 1
+            continue
+        if not isinstance(new, dict):
+            lines.append(f"| {rel} | — | — | — | not a bench doc |")
+            n_changes += 1
+            continue
+        stamp = stamp or _meta_line(new)
         old = _load_ref(ref, rel)
-        old_rows = (old or {}).get("rows", {})
-        for name, row in sorted(new.get("rows", {}).items()):
+        old_rows = old.get("rows", {}) if isinstance(old, dict) else {}
+        if not isinstance(old_rows, dict):
+            old_rows = {}
+        rows = new.get("rows", {})
+        if not isinstance(rows, dict):
+            rows = {}
+        for name, row in sorted(rows.items()):
             new_m = _metrics(row)
             old_m = _metrics(old_rows[name]) if name in old_rows else None
             for metric, nv in sorted(new_m.items()):
@@ -79,8 +111,10 @@ def diff_lines(ref: str = "HEAD^"):
                              f"| {delta:+.1%} |")
                 n_changes += 1
     if n_changes == 0:
-        return [f"Benchmark trajectory vs `{ref}`: no metric moved by "
-                f">= {CHANGE_THRESHOLD:.0%}."]
+        lines = [f"Benchmark trajectory vs `{ref}`: no metric moved by "
+                 f">= {CHANGE_THRESHOLD:.0%}."]
+    if stamp:
+        lines += ["", f"_new files {stamp}_"]
     return lines
 
 

@@ -23,7 +23,33 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import time
+
+
+def run_meta() -> dict:
+    """Provenance stamped into every BENCH_*.json: which commit, which
+    devices, when.  Each probe degrades to None rather than failing the
+    bench (detached checkouts, no-git tarballs, driverless CI)."""
+    meta = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "git_sha": None, "platform": None, "device_count": None}
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        if out.returncode == 0:
+            meta["git_sha"] = out.stdout.strip()
+    except OSError:
+        pass
+    try:
+        import jax
+        meta["platform"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+    except Exception:   # noqa: BLE001 — meta must never sink a bench run
+        pass
+    return meta
 
 
 def _parse_derived(derived: str) -> dict:
@@ -39,16 +65,20 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def write_bench_json(suite: str, rows: dict, out_dir: str | None = None) -> str:
+def write_bench_json(suite: str, rows: dict, out_dir: str | None = None,
+                     meta: dict | None = None) -> str:
     path = os.path.join(out_dir or os.path.dirname(os.path.abspath(__file__)),
                         f"BENCH_{suite}.json")
+    doc = {"suite": suite, "rows": rows}
+    if meta is not None:
+        doc["meta"] = meta
     with open(path, "w") as f:
-        json.dump({"suite": suite, "rows": rows}, f, indent=1, sort_keys=True)
+        json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
     return path
 
 
-def run_suite(name: str, mod, emit=print) -> str:
+def run_suite(name: str, mod, emit=print, meta: dict | None = None) -> str:
     """Run one suite, tee its CSV lines to `emit`, write BENCH_<name>.json."""
     rows: dict = {}
 
@@ -66,7 +96,8 @@ def run_suite(name: str, mod, emit=print) -> str:
             }
 
     mod.main(emit=tee)
-    return write_bench_json(name, rows)
+    return write_bench_json(name, rows, meta=meta if meta is not None
+                            else run_meta())
 
 
 def main() -> None:
@@ -88,10 +119,11 @@ def main() -> None:
     }
     only = args[0] if args else None
     print("name,us_per_call,derived")
+    meta = run_meta()   # one stamp for the whole invocation
     for name, mod in mods.items():
         if only and name != only:
             continue
-        run_suite(name, mod)
+        run_suite(name, mod, meta=meta)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ production shape (shard_map + routing="a2a" + batched engine).
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -51,9 +52,13 @@ def main() -> int:
         # chaos canary (PR 6): seeded FaultPlan with one dropped + one
         # corrupted a2a answer leg on a forced 2-device mesh — asserts
         # checksum detection, dispatch-retry recovery, and row-identity
-        # vs execute_local (zero wrong rows under chaos)
+        # vs execute_local (zero wrong rows under chaos); PR 7 adds the
+        # exported fault-retry trace (detect -> retry -> clean epoch),
+        # uploaded by CI as a workflow artifact
         ("serving_chaos", lambda emit: bench_serving.chaos_main(
-            emit=emit, num_shards=2, lubm_scale=1)),
+            emit=emit, num_shards=2, lubm_scale=1,
+            trace_path=os.path.join(bench_serving.ARTIFACT_DIR,
+                                    "TRACE_chaos.json"))),
     ]
     failures = []
     for name, fn in suites:

@@ -146,10 +146,12 @@ def a2a_step_payload_bytes(bucket_cap: int, answer_cap: int,
     key slots + count + missed per bucket slot). The local diagonal block
     never crosses the network and is excluded. The ONE shared formula —
     the serving engine's traffic accounting and both benches call this,
-    so a wire-format change (like PR 4's 44->20 B record) lands once."""
-    s = num_shards
-    return ((s - 1) * bucket_cap * (8 + 8)
-            + (s - 1) * bucket_cap * (answer_cap * 8 + 4 + 4))
+    so a wire-format change (like PR 4's 44->20 B record) lands once;
+    the per-leg split lives next to the wire format itself
+    (``distributed.a2a_leg_bytes``) and feeds the probe/answer byte
+    counters on dispatch spans and metrics."""
+    probe, answer = dist.a2a_leg_bytes(bucket_cap, answer_cap, num_shards)
+    return probe + answer
 
 
 def query_traffic(query, mode: str, caps: Caps = Caps(),
@@ -325,19 +327,28 @@ def _probe_fanout(store: TripleStore, plan, bnd: ms.Bindings, s: int,
 
 def _execute_local_instrumented(store: TripleStore, plan: PhysicalPlan,
                                 cfg: ExecConfig, stats: list):
+    import time as _time
     steps = plan.steps
     keys_of = lambda pat, dom: store.flat_keys(make_plan(pat, dom).index)
     s_route = plan.route_shards
+    t0 = _time.perf_counter()
     bnd = ms.scan_pattern(steps[0].patterns[0],
                           keys_of(steps[0].patterns[0], ()),
                           steps[0].caps.out_cap, cfg.impl)
     ovf_prev = int(np.asarray(bnd.overflow))
     ovf_cum = [ovf_prev]
+    t1 = _time.perf_counter()
+    # per-step wall stamps (t0/t1 on the perf_counter clock, wall_s the
+    # delta) ride the stats dicts only on this opt-in path — the jitted
+    # hot path keeps zero host syncs; obs.trace.spans_from_stats turns
+    # them into per-cascade-step trace spans
     stats.append({"kind": "scan", "n_in": 0, "n_out": int(bnd.count()),
                   "nv": len(bnd.vars), "relation": int(bnd.count()),
-                  "n_patterns": 1, "overflow": ovf_prev})
+                  "n_patterns": 1, "overflow": ovf_prev,
+                  "t0": t0, "t1": t1, "wall_s": t1 - t0})
     for st in steps[1:]:
         c = st.caps
+        t0 = _time.perf_counter()
         n_in, nv_in = int(bnd.count()), len(bnd.vars)
         deliveries = max_region = probe_len = 0
         if st.kind == "multiway":
@@ -359,18 +370,21 @@ def _execute_local_instrumented(store: TripleStore, plan: PhysicalPlan,
                 keys = keys_of(pat, ())
                 bnd = rs.local_reduce_step(bnd, pat, keys, c.scan_cap,
                                            c.probe_cap, c.out_cap, cfg.impl)
+        n_out = int(bnd.count())         # host sync: the step's work is done
+        t1 = _time.perf_counter()        # before the relation-scan extras
         rel = 0
         for pat in st.patterns:
             r = ms.scan_pattern(pat, keys_of(pat, ()), c.scan_cap, cfg.impl)
             rel += int(r.count())
         ovf_now = int(np.asarray(bnd.overflow))
         stats.append({"kind": st.kind, "n_in": n_in,
-                      "n_out": int(bnd.count()), "nv": nv_in,
+                      "n_out": n_out, "nv": nv_in,
                       "relation": rel, "n_patterns": len(st.patterns),
                       "deliveries": deliveries, "route_shards": s_route,
                       "deliveries_max_region": max_region,
                       "probe_len_max": probe_len,
-                      "overflow": ovf_now - ovf_prev})
+                      "overflow": ovf_now - ovf_prev,
+                      "t0": t0, "t1": t1, "wall_s": t1 - t0})
         ovf_prev = ovf_now
         ovf_cum.append(ovf_now)
     bnd.step_overflow = jnp.asarray(ovf_cum, jnp.int32)  # same contract as

@@ -132,6 +132,22 @@ def auto_bucket_cap(batch: int, num_shards: int) -> int:
     return min(batch, max(ceil_div(2 * batch, num_shards), 32))
 
 
+def a2a_leg_bytes(bucket_cap: int, answer_cap: int,
+                  num_shards: int) -> tuple[int, int]:
+    """Static per-shard a2a payload of ONE dist_probe round, split by
+    wire leg: ``(probe_leg, answer_leg)`` bytes. The probe leg ships the
+    per-destination (lo, hi) bucket records out; the answer leg returns
+    ``answer_cap`` key slots + count + missed per bucket slot. The local
+    diagonal block never crosses the network and is excluded. Defined
+    here next to ``_dist_probe_a2a`` — the function that IS the wire
+    format — so a record-layout change updates its accounting in the
+    same file; ``bgp.a2a_step_payload_bytes`` sums the two legs."""
+    s = num_shards
+    probe = (s - 1) * bucket_cap * (8 + 8)
+    answer = (s - 1) * bucket_cap * (answer_cap * 8 + 4 + 4)
+    return probe, answer
+
+
 def _dist_probe_a2a(lo, hi, flt, msk, eq_positions, local_keys,
                     probe_cap: int, axis: str, impl: str, splits,
                     bucket_cap: int, fault=None, with_check: bool = False):

@@ -622,9 +622,12 @@ def explain(plan: PhysicalPlan, stats: list | None = None,
     """Human-readable rendering of a PhysicalPlan: per step the operator,
     patterns, estimated in/out rows + max probe fan-out, and the embedded
     caps. With `stats` (the per-step dicts an instrumented execute_local
-    appends) each step also shows ACTUAL output rows and the per-step
-    overflow counter — undersized caps are reported, never silent.
-    `decode` (e.g. Dictionary.term) renders constant ids as terms."""
+    appends) each step also shows ACTUAL output rows, the per-step
+    overflow counter, and the estimated-vs-actual drift (`drift=xR`,
+    actual/estimated output rows — the cost model's per-step error, so
+    cardinality misestimates are visible without a trace viewer) —
+    undersized caps are reported, never silent. `decode` (e.g.
+    Dictionary.term) renders constant ids as terms."""
     lines = [f"PhysicalPlan: {len(plan.steps)} steps, "
              f"ordering={plan.ordering}, est_cost={plan.cost:.0f}, "
              f"vars=({', '.join(plan.var_order)})"]
@@ -646,10 +649,20 @@ def explain(plan: PhysicalPlan, stats: list | None = None,
                     f"fanout_max={st.est_fanout_max}")
         line = f"  [{i}] {st.kind:<11s} {{{pats}}}  {est}  caps: {caps_s}"
         if stats is not None and i < len(stats):
-            line += (f"  actual: rows={stats[i]['n_out']} "
-                     f"overflow={stats[i].get('overflow', 0)}")
+            act = stats[i]["n_out"]
+            drift = (act / st.est_out if st.est_out
+                     else (float("inf") if act else 1.0))
+            line += (f"  actual: rows={act} "
+                     f"overflow={stats[i].get('overflow', 0)} "
+                     f"drift=x{drift:.2f}")
+            if "wall_s" in stats[i]:
+                line += f" wall={stats[i]['wall_s'] * 1e3:.2f}ms"
         lines.append(line)
     if stats is not None:
+        est_final = plan.steps[-1].est_out if plan.steps else 0
+        act_final = stats[-1]["n_out"] if stats else 0
+        lines.append(f"  est cost {plan.cost:.0f}; final rows "
+                     f"est={est_final} actual={act_final}")
         total_ovf = sum(st.get("overflow", 0) for st in stats)
         if total_ovf:
             lines.append(f"  !! {total_ovf} rows dropped by capacity "

@@ -69,7 +69,9 @@ with non-truncating caps the row sets are identical.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import logging
 import time
 from collections import deque
 from typing import Sequence
@@ -81,6 +83,7 @@ import numpy as np
 from repro.core import mapsin as ms
 from repro.core.bgp import (ExecConfig, apply_dist_step, execute_local,
                             mesh_fingerprint)
+from repro.core.distributed import a2a_leg_bytes
 from repro.core.mapsin import Bindings, apply_residual, compact
 from repro.core.plan import make_plan, probe_ranges, residual_values
 from repro.core.planner import (ALL_OPERATORS, ENGINE_OPERATORS, Caps,
@@ -88,8 +91,16 @@ from repro.core.planner import (ALL_OPERATORS, ENGINE_OPERATORS, Caps,
                                 escalate_caps, quantize_cap)
 from repro.core.rdf import Pattern, is_var, unpack3
 from repro.core.triple_store import LRUCache, TripleStore
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import Span, Tracer, spans_from_stats
 from repro.serve.faults import FaultPlan
 from repro.serve.sparql import ParsedQuery, parse_bgp
+
+# engine lifecycle events (DESIGN.md §8): admission at DEBUG, shed /
+# escalation / fallback / timeout at INFO, fault quarantine at WARNING.
+# No handler is installed here — with default logging config the
+# effective level is WARNING, so a healthy engine is silent.
+log = logging.getLogger("repro.serve")
 
 
 class EngineBusy(RuntimeError):
@@ -282,6 +293,11 @@ class _Request:
     inexact_ok: bool = False        # bounded-inexact opt-in: serve capped
                                     # results + counters, never escalate
     prior_stats: dict | None = None  # last attempt's stats (timeout payload)
+    est_cost: float = 0.0           # planner's estimated cost (span attrs)
+    span: Span | None = None        # open root "query" trace span, if any
+    tq0: float = 0.0                # tracer-clock stamp of this rung's
+                                    # queue entry (-1.0 once its "queued"
+                                    # span has been emitted)
 
 
 def _pow2_at_least(n: int) -> int:
@@ -289,6 +305,20 @@ def _pow2_at_least(n: int) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+_RUNG_NAMES = tuple(f"rung{i}" for i in range(8))
+
+
+def _rung_name(attempt: int) -> str:
+    return (_RUNG_NAMES[attempt] if attempt < len(_RUNG_NAMES)
+            else f"rung{attempt}")
+
+
+# shared attrs dict for the per-query admission span: a successful submit
+# carries no per-query payload (the root "query" span holds it), so every
+# submit span can alias ONE dict instead of allocating its own
+_SUBMIT_ATTRS: dict = {}
 
 
 class ServeEngine:
@@ -320,7 +350,9 @@ class ServeEngine:
                  dispatch_timeout_s: float | None = None,
                  fault_plan: FaultPlan | None = None,
                  check_answers: bool | None = None,
-                 fault_retries: int = 2):
+                 fault_retries: int = 2,
+                 tracer: Tracer | None = None,
+                 metrics=None, name: str = "engine"):
         if mode != "mapsin":
             raise ValueError("ServeEngine serves the MAPSIN path only "
                              "(reduce-side re-scans need an empty domain)")
@@ -351,6 +383,21 @@ class ServeEngine:
             raise ValueError("answer-leg checksums need a mesh and "
                              "routing='a2a'")
         self.fault_retries = fault_retries
+        # observability (DESIGN.md §8): `tracer` records query-lifecycle
+        # spans (None = off — every hook is behind one `is not None`
+        # test, so the default path does no extra work); `metrics` is the
+        # registry lifecycle counters/histograms record into: None = the
+        # process-global obs.REGISTRY, False = disabled (no-op registry),
+        # or an explicit MetricsRegistry. Both are plain attributes — a
+        # harness may attach/detach them on a warmed engine.
+        self.tracer = tracer
+        self.metrics_registry = (
+            obs_metrics.REGISTRY if metrics is None
+            else obs_metrics.NULL_REGISTRY if metrics is False else metrics)
+        self.name = name
+        self._step_span: Span | None = None
+        self._t_first_dispatch: float | None = None
+        self._t_last_dispatch: float | None = None
         self._compiled = LRUCache(compile_cache_size)
         self._signatures = LRUCache(max(4 * compile_cache_size, 64))
         # template interning: hashing a Template (a whole step tuple) per
@@ -383,6 +430,43 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def metrics_registry(self):
+        return self._metrics_registry
+
+    @metrics_registry.setter
+    def metrics_registry(self, reg) -> None:
+        # the per-query fast path resolves each instrument ONCE and incs
+        # through a direct handle (registry get-or-create is measurable at
+        # qps scale); swapping registries invalidates those handles
+        self._metrics_registry = reg
+        self._m_requests: dict = {}      # tenant -> Counter
+        self._m_tpl_hist: dict = {}      # tid -> latency Histogram
+        self._m_ten_hist: dict = {}      # tenant -> latency Histogram
+        self._m_depth = reg.gauge("serve_queue_depth")
+        self._m_dispatches = reg.counter("serve_dispatches_total")
+        self._m_disp_queries = reg.counter("serve_dispatched_queries_total")
+        self._m_batch_hist = reg.histogram(
+            "serve_batch_size", buckets=obs_metrics.DEFAULT_SIZE_BUCKETS)
+
+    def metrics(self) -> dict:
+        """JSON snapshot of the engine's metrics registry: counters,
+        gauges, and histograms with estimated p50/p99 — per-template
+        (``serve_template_latency_seconds``) and per-tenant
+        (``serve_tenant_latency_seconds``) latency SLOs read straight
+        off it. Refreshes the derived ``serve_qps`` gauge (dispatched
+        queries over the first->last dispatch wall span) first. For
+        Prometheus text exposition use
+        ``engine.metrics_registry.to_prom_text()``. Empty when the
+        engine was built with ``metrics=False``."""
+        if (self._t_first_dispatch is not None
+                and self._t_last_dispatch is not None
+                and self._t_last_dispatch > self._t_first_dispatch):
+            span = self._t_last_dispatch - self._t_first_dispatch
+            self.metrics_registry.gauge("serve_qps", engine=self.name).set(
+                self.dispatched_queries / span)
+        return self.metrics_registry.to_dict()
+
     def _retry_after(self) -> float:
         """Resubmission hint in seconds: measured per-dispatch service
         time (EWMA) x queue depth in dispatches. 0.0 until a dispatch has
@@ -393,16 +477,20 @@ class ServeEngine:
         return self._service_ewma * depth
 
     def _signature_for(self, patterns, caps: Caps, plan=None):
-        """(tid, template, consts, var_order, tuned, step_caps) for the
-        query at a given cap budget, LRU-cached. cfg AND caps are part of
-        the key: planning (ordering, multiway grouping, embedded
+        """(tid, template, consts, var_order, tuned, step_caps, est_cost)
+        for the query at a given cap budget, LRU-cached. cfg AND caps are
+        part of the key: planning (ordering, multiway grouping, embedded
         capacities) depends on both, so a config change — or an
         overflow-escalated budget — must re-plan; a user-supplied plan
-        keys on itself."""
+        keys on itself. est_cost is the planner's cost estimate, carried
+        so traces can show estimated-vs-actual per query."""
         sig_key = ("sig", plan if plan is not None else patterns,
                    self.cfg, caps)
         hit = self._signatures.get(sig_key)
+        self._last_plan_cached = hit is not None
+        m = self.metrics_registry
         if hit is None:
+            m.counter("serve_plan_cache_misses_total").inc()
             if plan is None:
                 plan = self._compile(patterns, caps)
             template, consts, var_order = plan_signature(
@@ -410,8 +498,11 @@ class ServeEngine:
             tid = self._template_ids.setdefault(template,
                                                 len(self._template_ids))
             tuned, step_caps = self._plan_caps(plan, caps)
-            hit = (tid, template, consts, var_order, tuned, step_caps)
+            hit = (tid, template, consts, var_order, tuned, step_caps,
+                   float(plan.cost))
             self._signatures[sig_key] = hit
+        else:
+            m.counter("serve_plan_cache_hits_total").inc()
         return hit
 
     def submit(self, query, arrival: float | None = None,
@@ -434,6 +525,26 @@ class ServeEngine:
         opts into bounded-inexact degraded mode: an overflowed result is
         served as-is with its per-step overflow counters attached
         (stats["degraded"]) rather than escalated."""
+        tr = self.tracer
+        if tr is None:
+            return self._submit(query, arrival, deadline_s, tenant,
+                                priority, inexact_ok)
+        t0 = tr.now()
+        try:
+            rid = self._submit(query, arrival, deadline_s, tenant,
+                               priority, inexact_ok)
+        except Exception as e:
+            tr.record("submit", t0, tr.now(), outcome=type(e).__name__,
+                      tenant=tenant)
+            raise
+        tr.spans.append(Span("submit", t0, tr.now(), "engine",
+                             _SUBMIT_ATTRS))
+        return rid
+
+    def _submit(self, query, arrival: float | None = None,
+                deadline_s: float | None = None, tenant: str | None = None,
+                priority: int = 0, inexact_ok: bool = False) -> int:
+        tr = self.tracer
         select = None
         plan = None
         if isinstance(query, str):
@@ -470,8 +581,15 @@ class ServeEngine:
         # signature BEFORE admission: a rejected submit still returns its
         # compiled plan (satellite: EngineBusy must not waste the planning
         # work), and the LRU keeps the cost at one dict probe on repeats
-        tid, template, consts, var_order, tuned, step_caps = \
+        tp0 = tr.now() if tr is not None else 0.0
+        tid, template, consts, var_order, tuned, step_caps, est_cost = \
             self._signature_for(patterns, self.caps, plan=plan)
+        if tr is not None and not self._last_plan_cached:
+            # plan spans only where planning actually ran; a cache hit is
+            # one dict probe, carried as `template` on the submit span
+            tr.record("plan", tp0, tr.now(), template=tid,
+                      est_cost=est_cost)
+        m = self._metrics_registry
         if len(self._queue) >= self.max_queue:
             victim = None
             for r in self._queue:
@@ -481,6 +599,9 @@ class ServeEngine:
                                                    -victim.enq)):
                     victim = r
             if victim is None:
+                m.counter("serve_busy_total").inc()
+                log.info("busy: queue depth %d at max_queue (tenant=%s)",
+                         len(self._queue), tenant)
                 raise EngineBusy(
                     f"queue depth {len(self._queue)} at max_queue",
                     plan=(plan if plan is not None
@@ -496,15 +617,49 @@ class ServeEngine:
                 retry_after=self._retry_after()))
             self.shed_by_tenant[victim.tenant] = (
                 self.shed_by_tenant.get(victim.tenant, 0) + 1)
+            m.counter("serve_sheds_total", tenant=str(victim.tenant),
+                      reason="priority").inc()
+            log.info("shed rid=%d tenant=%s priority=%d (evicted by "
+                     "priority=%d)", victim.rid, victim.tenant,
+                     victim.priority, priority)
+            if tr is not None and victim.span is not None:
+                tv = tr.now()
+                if victim.tq0 >= 0:
+                    tr.record("queued", victim.tq0, tv, track="query",
+                              parent=victim.span, async_id=victim.rid,
+                              outcome="shed")
+                tr.end(victim.span, outcome="shed")
+                victim.span = None
         rid = self._next_rid
         self._next_rid += 1
         enq = arrival if arrival is not None else time.monotonic()
         deadline = None if deadline_s is None else enq + deadline_s
+        root = None
+        tq0 = 0.0
+        if tr is not None:
+            # root "query" span, opened inline (its "queued"/"rung"
+            # children are materialized in bulk at dispatch time — the
+            # per-query tracing budget is nanoseconds, DESIGN.md §8)
+            attrs = {"template": tid, "tenant": tenant,
+                     "est_cost": est_cost, "n_patterns": len(patterns)}
+            if priority:
+                attrs["priority"] = priority
+            tq0 = tr.now()
+            root = Span("query", tq0, None, "query", attrs, None, None, rid)
+            tr._open[root.span_id] = root
         self._queue.append(_Request(
             rid, tid, template, consts, var_order, select, arrival, enq,
             tuned, step_caps, patterns=patterns, ecaps=self.caps,
             deadline=deadline, tenant=tenant, priority=priority,
-            inexact_ok=inexact_ok))
+            inexact_ok=inexact_ok, est_cost=est_cost, span=root, tq0=tq0))
+        c = self._m_requests.get(tenant)
+        if c is None:
+            c = self._m_requests[tenant] = m.counter(
+                "serve_requests_total", tenant=str(tenant))
+        c.inc()
+        self._m_depth.set(len(self._queue))
+        log.debug("admit rid=%d template=t%d tenant=%s queue=%d",
+                  rid, tid, tenant, len(self._queue))
         return rid
 
     # --- batched execution ----------------------------------------------
@@ -622,11 +777,23 @@ class ServeEngine:
                self.store.layout_key, bucket_cap, step_caps, fsel,
                with_check)
         hit = self._compiled.get(key)
+        m = self.metrics_registry
         if hit is None:
+            m.counter("serve_compile_cache_misses_total").inc()
+            tr = self.tracer
+            tc0 = tr.now() if tr is not None else 0.0
             hit = (self._build_sharded(template, batch, bucket_cap,
                                        step_caps, fsel, with_check)
                    if self.mesh is not None else self._build(template, batch))
+            if tr is not None:
+                # the jit wrapper build; XLA's lazy compile lands inside
+                # the first dispatch span that uses it
+                tr.record("compile", tc0, tr.now(), track="engine",
+                          parent=self._step_span, template=tid, batch=batch)
             self._compiled[key] = hit
+            m.gauge("serve_compile_cache_size").set(len(self._compiled))
+        else:
+            m.counter("serve_compile_cache_hits_total").inc()
         return hit
 
     def _build(self, template: Template, batch: int):
@@ -750,18 +917,26 @@ class ServeEngine:
         the local (mesh-less) path."""
         jitted, scratch_vars = self._compiled_batch(
             tid, template, batch, bucket_cap, step_caps, fsel, with_check)
+        # optional jax.profiler bracket: lines the engine dispatch up with
+        # XLA's own timeline when the tracer was built with
+        # jax_profiler=True; a nullcontext otherwise
+        bracket = (self.tracer.jax_bracket(f"serve_dispatch/t{tid}b{batch}")
+                   if self.tracer is not None else contextlib.nullcontext())
         if self.mesh is None:
             out_cap = template.steps[0].caps.out_cap
-            out, step_ovf = jitted(self.store.flat_keys(0),
-                                   self.store.flat_keys(1),
-                                   jnp.asarray(consts),
-                                   self._scratch(scratch_vars, batch,
-                                                 out_cap))
+            with bracket:
+                out, step_ovf = jitted(self.store.flat_keys(0),
+                                       self.store.flat_keys(1),
+                                       jnp.asarray(consts),
+                                       self._scratch(scratch_vars, batch,
+                                                     out_cap))
             return (np.asarray(out.table)[None], np.asarray(out.valid)[None],
                     np.asarray(out.overflow)[None],
                     np.asarray(step_ovf)[None], 0)
-        t, v, o, so, bad = jitted(self.store.keys_spo, self.store.keys_ops,
-                                  jnp.asarray(consts))
+        with bracket:
+            t, v, o, so, bad = jitted(self.store.keys_spo,
+                                      self.store.keys_ops,
+                                      jnp.asarray(consts))
         self.a2a_payload_bytes += self._payload_bytes(bucket_cap, step_caps)
         # (S, n_steps, batch) -> (S, batch, n_steps)
         return (np.asarray(t), np.asarray(v), np.asarray(o),
@@ -823,12 +998,30 @@ class ServeEngine:
         final attempt."""
         caps = escalate_caps(r.ecaps if r.ecaps is not None else self.caps)
         self.fallbacks += 1
+        self.metrics_registry.counter("serve_fallbacks_total").inc()
+        log.info("exact_fallback rid=%d after %d escalations", r.rid,
+                 r.attempt)
+        tr = self.tracer
+        fsp = (tr.begin("exact_fallback", track="query", parent=r.span,
+                        async_id=r.rid, attempt=r.attempt)
+               if tr is not None and r.span is not None else None)
+        tries = 0
+        step_stats: list | None = None
         for _ in range(8):
+            tries += 1
+            # traced fallbacks run the instrumented path: per-step wall
+            # stamps become cascade_step child spans (tracer clock ==
+            # perf_counter, the stats path's stamp clock)
+            step_stats = [] if fsp is not None else None
             bnd = execute_local(self.store, r.patterns, self.mode, self.cfg,
-                                caps)
+                                caps, stats=step_stats)
             if int(bnd.overflow) == 0:
                 break
             caps = escalate_caps(caps)
+        if fsp is not None:
+            spans_from_stats(tr, step_stats, parent=fsp, track="query",
+                             async_id=r.rid)
+            tr.end(fsp, tries=tries, out_cap=caps.out_cap)
         rows = np.asarray(bnd.table)[np.asarray(bnd.valid)]
         ovf = np.asarray(bnd.step_overflow)
         stats = {"kinds": ("fallback",),
@@ -846,17 +1039,35 @@ class ServeEngine:
         compile once), keep identity/deadline/enq so total latency and
         deadline accounting span all attempts."""
         ecaps = escalate_caps(r.ecaps if r.ecaps is not None else self.caps)
-        tid, template, consts, var_order, tuned, step_caps = \
+        tid, template, consts, var_order, tuned, step_caps, est_cost = \
             self._signature_for(r.patterns, ecaps)
         self.escalations += 1
+        self.metrics_registry.counter("serve_escalations_total").inc()
+        log.info("escalate rid=%d attempt=%d out_cap %d -> %d", r.rid,
+                 r.attempt + 1,
+                 (r.ecaps or self.caps).out_cap, ecaps.out_cap)
+        tr = self.tracer
         self._queue.append(dataclasses.replace(
             r, tid=tid, template=template, consts=consts,
             var_order=var_order, tuned=tuned, step_caps=step_caps,
-            ecaps=ecaps, attempt=r.attempt + 1, prior_stats=stats))
+            ecaps=ecaps, attempt=r.attempt + 1, prior_stats=stats,
+            est_cost=est_cost, tq0=tr.now() if tr is not None else 0.0))
 
     def _timeout(self, r: _Request, phase: str, now: float,
                  stats: dict | None = None) -> QueryTimeout:
         self.timeouts += 1
+        self.metrics_registry.counter("serve_timeouts_total",
+                                      phase=phase).inc()
+        log.info("timeout rid=%d phase=%s waited=%.4fs", r.rid, phase,
+                 max(now - r.enq, 0.0))
+        tr = self.tracer
+        if tr is not None and r.span is not None:
+            if r.tq0 >= 0:                # still queued: wait span first
+                tr.record("queued", r.tq0, tr.now(), track="query",
+                          parent=r.span, async_id=r.rid, outcome="timeout",
+                          phase=phase)
+            tr.end(r.span, outcome="timeout", phase=phase)
+            r.span = None
         return QueryTimeout(
             r.rid, r.var_order, np.zeros((0, len(r.var_order)), np.int32),
             0, r.select, stats if stats is not None else r.prior_stats,
@@ -877,6 +1088,34 @@ class ServeEngine:
         step_caps = self._step_caps_for(reqs, template)
         with_check = self.check_answers and self.mesh is not None
         n_joins = len(template.steps) - 1
+        tr = self.tracer
+        m = self.metrics_registry
+        # per-leg a2a payload of one physical dispatch (distributed.py's
+        # wire-format accounting, split probe-out vs answer-back)
+        probe_b = answer_b = 0
+        if self.mesh is not None and self.cfg.routing == "a2a":
+            for cap in step_caps:
+                pb, ab = a2a_leg_bytes(bucket_cap, cap,
+                                       self.store.num_shards)
+                probe_b += pb
+                answer_b += ab
+        tq = 0.0
+        if tr is not None:
+            # bulk-materialize the queued-wait spans: ONE clock read and a
+            # shared attrs dict per phase — this loop sits on the per-query
+            # hot path, whose whole budget is ~2% of service time (§8)
+            tq = tr.now()
+            q_attrs: dict[str, dict] = {}
+            append = tr.spans.append
+            for r in reqs:
+                if r.span is not None and r.tq0 >= 0:
+                    key = "escalation" if r.attempt else "admit"
+                    at = q_attrs.get(key)
+                    if at is None:
+                        at = q_attrs[key] = {"phase": key, "batch": batch}
+                    append(Span("queued", r.tq0, tq, "query", at, None,
+                                r.span.span_id, r.rid))
+                    r.tq0 = -1.0
         t0 = time.monotonic()
         delay = 0.0
         bad = 0
@@ -885,22 +1124,39 @@ class ServeEngine:
         # clean epochs share one compiled cascade (fsel normalized to None)
         for attempt in range(self.fault_retries + 1):
             fsel = None
+            epoch = self.fault_epoch
             if self.fault_plan is not None:
-                epoch = self.fault_epoch
                 fsel = self.fault_plan.selection(epoch, n_joins)
                 delay += self.fault_plan.delay_s_at(epoch)
                 if not any(d or c for d, c in fsel):
                     fsel = None
             self.fault_epoch += 1
+            dsp = (tr.begin("dispatch", track="engine",
+                            parent=self._step_span, template=reqs[0].tid,
+                            batch=batch, n=n, epoch=epoch, retry=attempt,
+                            faults=fsel is not None, bucket_cap=bucket_cap,
+                            probe_bytes=probe_b, answer_bytes=answer_b)
+                   if tr is not None else None)
             # (S, batch, out_cap, nv) per-shard tables; S == 1 un-meshed
             tables, valids, overflow, step_ovf, bad = self._dispatch(
                 reqs[0].tid, template, batch, consts, bucket_cap,
                 step_caps, fsel, with_check)
+            if dsp is not None:
+                tr.end(dsp, bad=bad)
+            if probe_b:
+                m.counter("serve_a2a_probe_bytes_total").inc(probe_b)
+                m.counter("serve_a2a_answer_bytes_total").inc(answer_b)
             if bad == 0:
                 break
             self.corrupt_detected += bad
+            m.counter("serve_faults_detected_total").inc(bad)
+            log.warning("a2a answer-leg checksum mismatch: %d block(s) "
+                        "quarantined (epoch=%d)%s", bad, epoch,
+                        "; retrying" if attempt < self.fault_retries
+                        else "; retries exhausted")
             if attempt < self.fault_retries:
                 self.fault_redispatches += 1
+                m.counter("serve_fault_redispatches_total").inc()
         elapsed = (time.monotonic() - t0) + delay
         a = 0.3                                       # service-time EWMA
         self._service_ewma = (elapsed if self._service_ewma == 0.0
@@ -912,6 +1168,20 @@ class ServeEngine:
         kinds = tuple(st.kind for st in template.steps)
         self.dispatches += 1
         self.dispatched_queries += n
+        tnow = time.monotonic()
+        if self._t_first_dispatch is None:
+            self._t_first_dispatch = tnow - elapsed
+        self._t_last_dispatch = tnow
+        self._m_dispatches.inc()
+        self._m_disp_queries.inc(n)
+        self._m_batch_hist.observe(n)
+        if bad > 0:
+            m.counter("serve_fault_unrecovered_total").inc()
+        # delivery: rung + root spans materialize HERE, one shared `td`
+        # clock read and one shared attrs dict per (attempt, outcome) —
+        # nothing span-shaped is allocated per query before this point
+        td = tr.now() if tr is not None else 0.0
+        r_shared: dict = {}
         results = []
         for i, r in enumerate(reqs):
             # cumulative per-step counters summed over shards -> deltas:
@@ -928,15 +1198,44 @@ class ServeEngine:
                 # a dispatch that finishes past the deadline (or trips the
                 # engine watchdog) is SHED — never a truncated row set
                 # delivered as if complete
+                if tr is not None and r.span is not None:
+                    tr.spans.append(Span(
+                        _rung_name(r.attempt), tq, td, "query",
+                        {"attempt": r.attempt, "outcome": "timeout",
+                         "batch": batch, "bucket_cap": bucket_cap},
+                        None, r.span.span_id, r.rid))
                 results.append(self._timeout(r, "dispatch", end_clock,
                                              stats))
                 continue
             ovf = int(overflow[:, i].sum())
+            if ovf > 0:
+                m.counter("serve_overflow_rows_total").inc(ovf)
             if (ovf > 0 and not r.inexact_ok and self.max_escalations > 0
                     and r.patterns is not None and bad == 0):
                 if r.attempt + 1 >= self.max_escalations:
-                    results.append(self._exact_fallback(r))
+                    if tr is not None and r.span is not None:
+                        tr.spans.append(Span(
+                            _rung_name(r.attempt), tq, td, "query",
+                            {"attempt": r.attempt, "outcome": "fallback",
+                             "overflow": ovf, "batch": batch,
+                             "out_cap": (r.ecaps or self.caps).out_cap,
+                             "bucket_cap": bucket_cap},
+                            None, r.span.span_id, r.rid))
+                    res = self._exact_fallback(r)
+                    results.append(res)
+                    if tr is not None and r.span is not None:
+                        tr.end(r.span, outcome="ok", fallback=True,
+                               rows=len(res.rows))
+                        r.span = None
                 else:
+                    if tr is not None and r.span is not None:
+                        tr.spans.append(Span(
+                            _rung_name(r.attempt), tq, td, "query",
+                            {"attempt": r.attempt, "outcome": "escalate",
+                             "overflow": ovf, "batch": batch,
+                             "out_cap": (r.ecaps or self.caps).out_cap,
+                             "bucket_cap": bucket_cap},
+                            None, r.span.span_id, r.rid))
                     self._escalate(r, stats)
                 continue
             if ovf > 0 and r.inexact_ok:
@@ -946,6 +1245,50 @@ class ServeEngine:
                                   )[:, nk:nk + len(r.var_order)]
             results.append(QueryResult(r.rid, r.var_order, rows, ovf,
                                        r.select, stats))
+            outcome = "degraded" if stats.get("degraded") else "ok"
+            root = r.span
+            if tr is not None and root is not None:
+                # rung spans mark the ABNORMAL ladder (escalated attempts,
+                # degraded serves); a first-attempt clean query is fully
+                # told by queued + root + the engine dispatch span, and
+                # that hot path skips the extra allocation
+                if r.attempt or outcome != "ok":
+                    at = r_shared.get((r.attempt, outcome))
+                    if at is None:
+                        at = r_shared[(r.attempt, outcome)] = {
+                            "attempt": r.attempt, "outcome": outcome,
+                            "batch": batch, "bucket_cap": bucket_cap,
+                            "out_cap": (r.ecaps or self.caps).out_cap}
+                    tr.spans.append(Span(_rung_name(r.attempt), tq, td,
+                                         "query", at, None, root.span_id,
+                                         r.rid))
+                # inline tr.end(root): skips the open-table membership
+                # check and a second clock read on the hottest path
+                del tr._open[root.span_id]
+                root.t1 = td
+                root.attrs["outcome"] = outcome
+                root.attrs["rows"] = len(rows)
+                if ovf:
+                    root.attrs["overflow"] = ovf
+                tr.spans.append(root)
+                r.span = None
+            # per-template / per-tenant latency SLO histograms — only
+            # when enqueue and completion live on the same clock domain
+            # (both harness-stamped or both monotonic)
+            if (r.arrival is not None) == (now is not None):
+                lat = max(end_clock - r.enq, 0.0)
+                h = self._m_tpl_hist.get(r.tid)
+                if h is None:
+                    h = self._m_tpl_hist[r.tid] = m.histogram(
+                        "serve_template_latency_seconds",
+                        template=f"{self.name}:t{r.tid}")
+                h.observe(lat)
+                h = self._m_ten_hist.get(r.tenant)
+                if h is None:
+                    h = self._m_ten_hist[r.tenant] = m.histogram(
+                        "serve_tenant_latency_seconds",
+                        tenant=str(r.tenant))
+                h.observe(lat)
         return results
 
     # --- scheduling ------------------------------------------------------
@@ -979,6 +1322,26 @@ class ServeEngine:
         "escalation" for an overflow-escalation retry) — expired queries
         never occupy batch slots. Results evicted by priority shedding
         (QueryShed) are delivered here too."""
+        tr = self.tracer
+        m = self.metrics_registry
+        if tr is None:
+            out = self._step(now, force)
+        else:
+            sp = self._step_span = tr.begin("step", track="engine")
+            try:
+                out = self._step(now, force)
+            except Exception:
+                tr.end(sp, outcome="error")
+                raise
+            finally:
+                self._step_span = None
+            tr.end(sp, delivered=len(out), queue=len(self._queue))
+        self._m_depth.set(len(self._queue))
+        m.tick()
+        return out
+
+    def _step(self, now: float | None = None,
+              force: bool = False) -> list[QueryResult]:
         out: list[QueryResult] = list(self._shed)
         self._shed.clear()
         if not self._queue:
