@@ -23,7 +23,8 @@ CHANGE_THRESHOLD = 0.05          # 5% relative move is worth a line
 HEADLINE = ("speedup", "qps_batched", "qps_seq", "time_ratio",
             "cold_speedup", "bytes_ratio", "avg_batch", "p99_ms_batched",
             "probe_ratio", "order_changed", "p99_fault_ratio",
-            "trace_overhead_ratio", "span_coverage")
+            "trace_overhead_ratio", "span_coverage",
+            "overlay_qps_ratio", "triples_per_s", "recovery_ms")
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 

@@ -31,7 +31,13 @@ def main() -> int:
                                    scan_cap=1 << 12, row_cap=16)
     suites = [
         ("loading", lambda emit: bench_loading.main(
-            emit=emit, lubm_scales=(1,), sp2b_scales=(500,))),
+            emit=emit, lubm_scales=(1,), sp2b_scales=(500,),
+            ingest_lubm_scale=1, ingest_waves=2, crash_canary=False)),
+        # durability canary (PR 8): a child process ingests WAL-synced
+        # batches until the parent SIGKILLs it mid-stream, then recovery
+        # must surface every acknowledged batch and nothing more
+        ("ingest_crash", lambda emit: bench_loading.ingest_crash_main(
+            emit=emit, kill_after_acks=4)),
         ("queries", lambda emit: bench_queries.run(
             scales=(1,), emit=emit, lubm_queries=("Q1", "Q4"),
             sp2b_queries=("Q10",), repeats=1)),

@@ -104,6 +104,33 @@ class Dictionary:
     def __len__(self) -> int:
         return len(self._bwd)
 
+    def terms(self) -> list[str]:
+        """Snapshot of the id -> term table (index i holds the term whose
+        id is i). The mutable store persists this in its snapshot and logs
+        increments to the WAL, so the dictionary survives restarts without
+        a full rebuild."""
+        return list(self._bwd)
+
+    def replay_term(self, idx: int, term: str) -> None:
+        """Idempotently apply a WAL-logged dictionary append: assign `term`
+        id `idx`. Replaying the same record twice is a no-op; a CONFLICTING
+        assignment (same id, different term — a corrupted or cross-wired
+        log) is an error, as is a gap (ids are dense by construction)."""
+        if idx < len(self._bwd):
+            if self._bwd[idx] != term:
+                raise ValueError(
+                    f"dictionary replay conflict: id {idx} is "
+                    f"{self._bwd[idx]!r}, log says {term!r}")
+            return
+        if idx != len(self._bwd):
+            raise ValueError(
+                f"dictionary replay gap: next id is {len(self._bwd)}, "
+                f"log assigns {idx}")
+        if idx >= MAX_ID:
+            raise ValueError("term dictionary overflow (>= 2^21 - 1 terms)")
+        self._fwd[term] = idx
+        self._bwd.append(term)
+
     def encode_triples(self, triples: Iterable[tuple[str, str, str]]) -> np.ndarray:
         out = np.array([[self.id(s), self.id(p), self.id(o)]
                         for s, p, o in triples], np.int32)

@@ -73,6 +73,12 @@ class TripleStore:
     counts_spo: jnp.ndarray  # (num_shards,) valid entries per shard
     counts_ops: jnp.ndarray
     n_triples: int
+    # monotonically increasing mutation counter (DESIGN.md §9): 0 for a
+    # build-once store, bumped by bump_version() on EVERY applied mutation
+    # batch (ingest / flush / recovery replay). It is part of layout_key,
+    # so every compile/plan/stat cache keyed on the store misses after a
+    # mutation instead of serving rows from a pre-ingest world.
+    store_version: int = 0
     # host-side memo: flattened keys, measured cardinalities, ordered step
     # plans and compiled cascades keyed by (patterns, cfg) — keeps repeated
     # query execution off the eager-dispatch path (core/bgp.py). LRU-bounded:
@@ -104,18 +110,38 @@ class TripleStore:
 
     @property
     def layout_key(self) -> tuple:
-        """Hashable shard-layout identity: shard shape + the actual region
-        boundaries of both indexes. A compiled cascade bakes the splits in
-        as constants, so any compile cache keyed on the store MUST include
-        this — rebuilding or resharding the store (different boundaries)
-        changes the key and can never reuse a stale compilation."""
+        """Hashable shard-layout identity: ``store_version`` + shard shape
+        + the actual region boundaries of both indexes. A compiled cascade
+        bakes the splits in as constants — and a compiled PLAN bakes in
+        measured statistics — so any compile cache keyed on the store MUST
+        include this: rebuilding, resharding, or MUTATING the store (live
+        ingest bumps store_version even when the boundaries happen to
+        survive) changes the key and can never reuse a stale compilation
+        against post-ingest data."""
         ck = ("layout_key",)
         if ck not in self.plan_cache:
             self.plan_cache[ck] = (
+                self.store_version,
                 self.num_shards, self.shard_cap, self.n_triples,
                 tuple(int(x) for x in np.asarray(self.splits_spo)),
                 tuple(int(x) for x in np.asarray(self.splits_ops)))
         return self.plan_cache[ck]
+
+    def bump_version(self) -> int:
+        """Mutation barrier (DESIGN.md §9): advance ``store_version`` and
+        drop EVERY memoized artifact in ``plan_cache`` — flattened key
+        views, host key copies, ``relation_stats``/``pattern_cardinality``
+        statistics, compiled plans with embedded measured capacities, and
+        compiled cascades. Anything derived from pre-mutation key values
+        is stale after an ingest: stale STATISTICS would only mis-price
+        operators (results stay exact — caps truncation is surfaced and
+        escalated, never silent), but a compiled sharded cascade bakes
+        region splits in as constants and a cached plan bakes in measured
+        a2a capacities, so wholesale invalidation is the only state a
+        mutation can leave behind that is correct by construction."""
+        self.store_version += 1
+        self.plan_cache.clear()
+        return self.store_version
 
     def storage_bytes(self) -> int:
         return int(self.keys_spo.size + self.keys_ops.size) * 8

@@ -7,4 +7,6 @@ from repro.serve.engine import (  # noqa: F401
     EngineBusy, QueryResult, QueryShed, QueryTimeout, ServeEngine,
     plan_signature,
 )
-from repro.serve.faults import Fault, FaultPlan  # noqa: F401
+from repro.serve.faults import (  # noqa: F401
+    DurabilityFaultPlan, Fault, FaultPlan, SimulatedCrash, WalFault,
+)

@@ -483,9 +483,13 @@ class ServeEngine:
         capacities) depends on both, so a config change — or an
         overflow-escalated budget — must re-plan; a user-supplied plan
         keys on itself. est_cost is the planner's cost estimate, carried
-        so traces can show estimated-vs-actual per query."""
+        so traces can show estimated-vs-actual per query. The store's
+        layout_key (which carries store_version) is part of the key too:
+        a plan embeds MEASURED statistics and a2a capacities, so a
+        post-ingest submit must re-plan rather than reuse a signature
+        computed against the pre-ingest store."""
         sig_key = ("sig", plan if plan is not None else patterns,
-                   self.cfg, caps)
+                   self.cfg, caps, self.store.layout_key)
         hit = self._signatures.get(sig_key)
         self._last_plan_cached = hit is not None
         m = self.metrics_registry

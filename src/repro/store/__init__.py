@@ -1,0 +1,9 @@
+"""Durable mutable storage: WAL + delta overlays + crash-consistent
+compaction (DESIGN.md §9) — the HBase memstore/WAL/HFile analog under
+the query stack."""
+from repro.store.mutable import MutableTripleStore
+from repro.store.wal import (REC_DICT, REC_TRIPLES, WalWriter, read_wal,
+                             scan_records)
+
+__all__ = ["MutableTripleStore", "WalWriter", "read_wal", "scan_records",
+           "REC_DICT", "REC_TRIPLES"]
